@@ -1,0 +1,68 @@
+"""Ablations the paper lists as future work (§6): which AdaPT ingredients
+matter? AlexNet × CIFAR10(synthetic), fixed steps/seed per variant.
+
+  * init: TNVS (paper §3.1) vs plain He-normal
+  * rounding: stochastic (paper §3.2) vs nearest
+  * strategy: adaptive min/mean/max (eq. 5) vs pinned strategies
+  * PushDown: on vs frozen ⟨8,4⟩ (no precision adaptation at all)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List
+
+import jax
+
+from benchmarks.paper_tables import _cnn_cfg, _eval_acc
+from repro.core.controller import snapshot
+from repro.train import train_loop
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "experiments/paper")
+
+
+def _variant(name: str, steps: int, batch: int):
+    cfg = _cnn_cfg("alexnet", 10, steps, batch, quant=True)
+    q = cfg.quant
+    if name == "nearest_rounding":
+        q = dataclasses.replace(q, stochastic_rounding=False)
+    elif name == "strategy_min":
+        q = dataclasses.replace(q, strategy="min")
+    elif name == "strategy_max":
+        q = dataclasses.replace(q, strategy="max")
+    elif name == "frozen_8_4":
+        # no precision switching at all: window never fills
+        cfg = dataclasses.replace(cfg, train=dataclasses.replace(
+            cfg.train, adapt_interval=10 ** 9))
+    return dataclasses.replace(cfg, quant=q)
+
+
+def run(steps: int = 150, batch: int = 64) -> List[Dict]:
+    variants = ["adapt_full", "nearest_rounding", "strategy_min",
+                "strategy_max", "frozen_8_4"]
+    out = []
+    for name in variants:
+        cfg = _variant(name, steps, batch)
+        telemetry: list = []
+        state, hist = train_loop.train(cfg, telemetry=telemetry,
+                                       log=lambda s: None)
+        snap = snapshot(state["adapt"]) if state["adapt"]["tensors"] else {}
+        avg_wl = (sum(float(t["wl"].mean()) for t in snap.values())
+                  / max(len(snap), 1))
+        rec = {"variant": name,
+               "acc": round(_eval_acc(cfg, state), 4),
+               "final_loss": round(hist[-1]["loss"], 4) if hist else None,
+               "avg_final_wl": round(avg_wl, 2)}
+        out.append(rec)
+        print(f"[ablation] {name:18s} acc={rec['acc']:.3f} "
+              f"loss={rec['final_loss']} avgWL={rec['avg_final_wl']}",
+              flush=True)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "ablations.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Beyond-paper benchmark: AdaPT on a transformer LM (the paper only
+evaluated CNNs). Trains the tiny LM config quantized vs float32 on the
+synthetic stride-induction stream and reports loss + perf-model metrics —
+evidence the technique transfers to the assigned LM architecture family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict
+
+import jax
+
+from repro.config import load_config
+from repro.core import perf_model
+from repro.train import train_loop
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "experiments/paper")
+
+
+def run(steps: int = 120) -> Dict:
+    out: Dict = {"steps": steps}
+    histories = {}
+    for mode in ("off", "simulate"):
+        cfg = load_config("tiny")
+        cfg = dataclasses.replace(
+            cfg,
+            quant=dataclasses.replace(cfg.quant, mode=mode),
+            optimizer=dataclasses.replace(cfg.optimizer, rop_patience=40),
+            train=dataclasses.replace(cfg.train, steps=steps,
+                                      adapt_interval=10, log_every=20))
+        telemetry: list = []
+        state, hist = train_loop.train(cfg, telemetry=telemetry,
+                                       log=lambda s: None)
+        histories[mode] = hist
+        out[f"final_loss_{mode}"] = hist[-1]["loss"] if hist else None
+        if mode == "simulate" and telemetry:
+            last = telemetry[-1]
+            wl = {k: float(jax.numpy.mean(v["wl"])) for k, v in last.items()}
+            sp = {k: float(jax.numpy.mean(v["sp"])) for k, v in last.items()}
+            out["avg_final_wl"] = round(sum(wl.values()) / len(wl), 2)
+            out["avg_final_nonzero"] = round(sum(sp.values()) / len(sp), 3)
+            # paper size model: sz = Σ sp·WL vs 32-bit dense
+            out["SZ"] = round(sum(sp[k] * wl[k] for k in wl)
+                              / (32.0 * len(wl)), 3)
+    out["iso_loss_gap"] = (None if None in (out.get("final_loss_off"),
+                                            out.get("final_loss_simulate"))
+                           else round(out["final_loss_simulate"]
+                                      - out["final_loss_off"], 4))
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "lm_bench.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    print("== LM transfer benchmark (beyond-paper) ==")
+    for k, v in out.items():
+        print(f"  {k}: {v}")
+    return out

@@ -1,0 +1,85 @@
+"""§Roofline table: read experiments/dryrun/*.json and emit the per-cell
+three-term roofline with bottleneck + usefulness ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.config import SHAPES, load_config
+from repro.configs import assigned_archs
+from repro.roofline import analysis
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN", "experiments/dryrun")
+
+
+def load_records(multi_pod: bool = False) -> List[Dict]:
+    suffix = "2pod" if multi_pod else "1pod"
+    out = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{suffix}.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def table(multi_pod: bool = False) -> str:
+    recs = load_records(multi_pod)
+    order = {a: i for i, a in enumerate(assigned_archs())}
+    sorder = {s: i for i, s in enumerate(SHAPES)}
+    recs.sort(key=lambda r: (order.get(r["arch"], 99),
+                             sorder.get(r["shape"], 9)))
+    chips = 512 if multi_pod else 256
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "bottleneck | model/HLO flops | status |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                         f"skipped: {r['reason']} |")
+            continue
+        if r["status"] != "compiled":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                         f"{r['status']} |")
+            continue
+        t = analysis.roofline_terms(r)
+        useful = ""
+        if r.get("kind") == "train":
+            try:
+                cfg = load_config(r["arch"], r["shape"])
+                useful = f"{analysis.usefulness(r, cfg, chips):.2f}"
+            except Exception:
+                useful = "?"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s'] * 1e3:.1f} | "
+            f"{t['memory_s'] * 1e3:.1f} | {t['collective_s'] * 1e3:.1f} | "
+            f"{t['bottleneck'].replace('_s', '')} | {useful} | compiled |")
+    return "\n".join(lines)
+
+
+def summary(multi_pod: bool = False) -> Dict:
+    recs = load_records(multi_pod)
+    return {
+        "compiled": sum(r["status"] == "compiled" for r in recs),
+        "skipped": sum(r["status"] == "skipped" for r in recs),
+        "failed": sum(r["status"] not in ("compiled", "skipped")
+                      for r in recs),
+    }
+
+
+def main():
+    for mp in (False, True):
+        recs = load_records(mp)
+        if not recs:
+            print(f"[roofline] no records for "
+                  f"{'2pod' if mp else '1pod'} in {DRYRUN_DIR}")
+            continue
+        print(f"\n== Roofline ({'2-pod/512' if mp else '1-pod/256'} chips) — "
+              f"{summary(mp)} ==")
+        print(table(mp))
+
+
+if __name__ == "__main__":
+    main()

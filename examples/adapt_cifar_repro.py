@@ -1,0 +1,51 @@
+"""End-to-end paper reproduction driver: AdaPT vs float32 on AlexNet /
+ResNet20 (the paper's own models), a few hundred steps, with the per-layer
+word-length trajectory dumped as CSV (the data behind the paper's figs 3/4).
+
+    PYTHONPATH=src python examples/adapt_cifar_repro.py \
+        --arch resnet20 --classes 100 --steps 300
+"""
+import argparse
+import csv
+import os
+
+from benchmarks import paper_tables
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="resnet20",
+                    choices=["alexnet", "resnet20"])
+    ap.add_argument("--classes", type=int, default=100, choices=[10, 100])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--out", default="experiments/paper")
+    args = ap.parse_args()
+
+    cell = paper_tables.run_cifar_experiment(
+        args.arch, args.classes, steps=args.steps, batch=args.batch)
+
+    print(f"\n{args.arch} × CIFAR{args.classes} ({args.steps} steps)")
+    print(f"  float32 accuracy : {cell['acc_float32']:.3f}")
+    print(f"  AdaPT accuracy   : {cell['acc_adapt']:.3f}  "
+          f"(delta {cell['delta']:+.3f})")
+    print(f"  SU train={cell['SU_train']:.2f} infer={cell['SU_infer']:.2f} "
+          f"SZ={cell['SZ']:.2f} MEM={cell['MEM']:.2f}")
+    print(f"  avg WL={cell['avg_wl']:.1f} avg nonzero={cell['avg_sp']:.2f}")
+
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(
+        args.out, f"wl_trajectory_{args.arch}_c{args.classes}.csv")
+    traj = cell["wl_trajectory"]
+    if traj:
+        with open(path, "w", newline="") as f:
+            w = csv.writer(f)
+            layers = sorted(traj[0])
+            w.writerow(["switch"] + layers)
+            for i, s in enumerate(traj):
+                w.writerow([i] + [f"{s[l]:.1f}" for l in layers])
+        print(f"  WL trajectories (fig. 3/4 data) -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Continuous batching over an AdaPT-quantized model: requests with
+different prompt lengths and budgets share a fixed slot pool; slots recycle
+as sequences finish (Orca/vLLM-style scheduling with a static batch — the
+jitted decode step never recompiles).
+
+    PYTHONPATH=src python examples/continuous_batching.py
+"""
+import time
+
+from repro.config import load_config
+from repro.serve.scheduler import ContinuousBatcher
+from repro.train import train_loop
+
+
+def main():
+    cfg = load_config("tiny")
+    print("[1/3] training a tiny AdaPT model (20 steps)...")
+    state, _ = train_loop.train(cfg, steps=20, log=lambda s: None)
+
+    cb = ContinuousBatcher(cfg, state["params"], state["adapt"],
+                           slots=3, max_context=48)
+    print("[2/3] submitting 7 requests with mixed prompts/budgets "
+          "into 3 slots...")
+    rids = []
+    for i in range(7):
+        prompt = [(7 * i + j) % cfg.model.vocab_size for j in range(3 + i)]
+        rids.append(cb.submit(prompt, max_new_tokens=4 + (i % 3)))
+
+    t0 = time.perf_counter()
+    steps = 0
+    done = []
+    while len(done) < len(rids) and steps < 500:
+        done += cb.step()
+        steps += 1
+        if steps % 5 == 0:
+            print(f"    step {steps:3d}: {len(done)}/{len(rids)} finished, "
+                  f"slot utilization {cb.utilization:.0%}")
+    dt = time.perf_counter() - t0
+
+    print(f"[3/3] drained in {steps} scheduler steps ({dt:.2f}s)")
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"    req {r.rid}: prompt {len(r.prompt):2d} tok -> "
+              f"generated {r.output}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Lower + compile one (arch × shape) cell on the 2-pod 512-chip mesh and
+print its memory/cost/roofline report — the multi-pod dry-run, example-sized.
+
+    PYTHONPATH=src python examples/multipod_dryrun.py --arch granite-8b \
+        --shape train_4k
+"""
+# The placeholder-device flag must precede every other jax-touching import.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--single-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+    from repro.roofline import analysis
+
+    rec = lower_cell(args.arch, args.shape,
+                     multi_pod=not args.single_pod, do_compile=True)
+    print(f"\n{args.arch} × {args.shape} on "
+          f"{'1-pod/256' if args.single_pod else '2-pod/512'} chips: "
+          f"{rec['status']}")
+    if rec["status"] != "compiled":
+        print("  reason:", rec.get("reason", rec.get("error")))
+        return
+    mem = rec.get("memory", {})
+    print(f"  compile time : {rec['compile_s']}s")
+    print(f"  arg bytes    : {mem.get('argument_bytes', 0) / 2**30:.2f} GiB")
+    print(f"  temp bytes   : {mem.get('temp_bytes', 0) / 2**30:.2f} GiB")
+    t = analysis.roofline_terms(rec)
+    print(f"  roofline     : compute {t['compute_s'] * 1e3:.1f} ms | "
+          f"memory {t['memory_s'] * 1e3:.1f} ms | "
+          f"collective {t['collective_s'] * 1e3:.1f} ms")
+    print(f"  bottleneck   : {t['bottleneck'].replace('_s', '')}")
+    coll = rec.get("collectives", {})
+    print("  collectives  :",
+          {k: f"{v / 2**30:.2f} GiB" for k, v in coll.items() if v})
+
+
+if __name__ == "__main__":
+    main()

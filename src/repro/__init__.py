@@ -1,0 +1,2 @@
+"""repro: AdaPT (Adaptive Precision Training) as a multi-pod JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+"""AdaPT core: the paper's contribution as composable JAX modules."""
+from repro.core import (controller, fixed_point, init, muppet, perf_model,
+                        pushdown, pushup, sparsity)
+
+__all__ = ["controller", "fixed_point", "init", "muppet", "perf_model",
+           "pushdown", "pushup", "sparsity"]

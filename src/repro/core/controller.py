@@ -1,0 +1,360 @@
+"""PrecisionController: AdaPT per-tensor state machine (paper alg. 1 & 2).
+
+State layout (a plain dict pytree → trivially checkpointable):
+
+    state = {
+      "tensors": { path: {
+          "wl":       int32 (L,) or ()     word length
+          "fl":       int32 (L,) or ()     fractional length
+          "lb":       int32 (L,) or ()     lookback
+          "res":      int32 (L,) or ()     EDF resolution
+          "count":    int32 (L,) or ()     optimizer steps in current window
+          "norm_sum": f32   (L,) or ()     Σ‖g_k‖₂ over window
+          "grad_sum": bf16  like param     Σ g_k over window
+          "sp":       f32   (L,) or ()     non-zero fraction at last switch
+      }},
+      "strategy":  int32 ()                 st ∈ {0:min, 1:mean, 2:max}
+      "loss_hist": f32 (H,)                 ring buffer
+      "loss_ptr":  int32 ()
+      "loss_seen": int32 ()
+    }
+
+Leaves with a leading scanned-layer dim L (the "blocks" stack) carry per-layer
+precision; everything is vmapped over that dim. The hot ``train_step`` only
+*reads* wl/fl and *writes* the accumulators; ``precision_switch`` (PushDown +
+PushUp + adaptation) runs every ``adapt_interval`` steps on the same jit graph
+regardless of which tensors actually switch (masked updates).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import QuantConfig
+from repro.core import fixed_point as fxp
+from repro.core import pushdown, pushup
+
+Array = jax.Array
+PyTree = Any
+
+STACKED_PREFIXES = ("blocks", "layers")
+
+
+def path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def is_quantized_leaf(path: str, leaf: Array, qcfg: QuantConfig) -> bool:
+    """Weights matrices/conv kernels are quantized; vectors, norms, routers,
+    SSM dynamics params are not (DESIGN.md §4)."""
+    if leaf.ndim < 2:
+        return False
+    low = path.lower()
+    return not any(pat in low for pat in qcfg.exclude)
+
+
+def is_stacked(path: str) -> bool:
+    return path.split("/", 1)[0] in STACKED_PREFIXES
+
+
+def _per_layer_shape(path: str, leaf: Array):
+    return (leaf.shape[0],) if (is_stacked(path) and leaf.ndim >= 3) else ()
+
+
+def _reduce_axes(path: str, leaf: Array):
+    if _per_layer_shape(path, leaf):
+        return tuple(range(1, leaf.ndim))
+    return tuple(range(leaf.ndim))
+
+
+# ---------------------------------------------------------------------------
+# Init
+
+
+def init_adapt_state(params: PyTree, qcfg: QuantConfig) -> Dict[str, Any]:
+    tensors = {}
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        p = path_str(path)
+        if not is_quantized_leaf(p, leaf, qcfg):
+            continue
+        ps = _per_layer_shape(p, leaf)
+        mk = lambda v, dt: jnp.full(ps, v, dt)
+        tensors[p] = {
+            "wl": mk(qcfg.init_wl, jnp.int32),
+            "fl": mk(qcfg.init_fl, jnp.int32),
+            "lb": mk(qcfg.lb_lwr, jnp.int32),
+            "res": mk(qcfg.r_lwr, jnp.int32),
+            "count": mk(0, jnp.int32),
+            "norm_sum": mk(0.0, jnp.float32),
+            "grad_sum": jnp.zeros(leaf.shape, jnp.bfloat16),
+            "sp": mk(1.0, jnp.float32),
+        }
+    st0 = {"min": 0, "mean": 1, "max": 2}[qcfg.strategy]
+    return {
+        "tensors": tensors,
+        "strategy": jnp.int32(st0),
+        "loss_hist": jnp.zeros((qcfg.loss_hist_len,), jnp.float32),
+        "loss_ptr": jnp.int32(0),
+        "loss_seen": jnp.int32(0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Per-step accumulation (cheap; lives inside train_step)
+
+
+def accumulate(state: Dict[str, Any], grads: PyTree, loss: Array) -> Dict[str, Any]:
+    flat = dict(
+        (path_str(p), g) for p, g in jax.tree_util.tree_flatten_with_path(grads)[0])
+    tensors = {}
+    for path, ts in state["tensors"].items():
+        g = flat[path].astype(jnp.float32)
+        axes = tuple(range(1, g.ndim)) if ts["wl"].shape else tuple(range(g.ndim))
+        gn = jnp.sqrt(jnp.sum(g * g, axis=axes) + 1e-30)
+        tensors[path] = {
+            **ts,
+            "norm_sum": ts["norm_sum"] + gn,
+            "grad_sum": (ts["grad_sum"].astype(jnp.float32) + g).astype(jnp.bfloat16),
+            "count": ts["count"] + 1,
+        }
+    h = state["loss_hist"]
+    ptr = state["loss_ptr"]
+    h = h.at[ptr].set(loss.astype(jnp.float32))
+    return {
+        **state,
+        "tensors": tensors,
+        "loss_hist": h,
+        "loss_ptr": (ptr + 1) % h.shape[0],
+        "loss_seen": state["loss_seen"] + 1,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Precision switch (PushDown + PushUp, masked per tensor/layer)
+
+
+def _avg_lookback(state) -> Array:
+    lbs = [jnp.mean(ts["lb"].astype(jnp.float32)) for ts in state["tensors"].values()]
+    return jnp.mean(jnp.stack(lbs)) if lbs else jnp.float32(0.0)
+
+
+def _loss_stats(state, lb_avg: Array):
+    """(avg loss over last ⌈lb_avg⌉ entries, most recent loss) from the ring."""
+    h = state["loss_hist"]
+    n = h.shape[0]
+    ptr = state["loss_ptr"]                       # next write slot
+    seen = jnp.minimum(state["loss_seen"], n)
+    k = jnp.clip(jnp.ceil(lb_avg).astype(jnp.int32), 1, seen)
+    idx = (ptr - 1 - jnp.arange(n)) % n           # most recent first
+    vals = h[idx]
+    mask = (jnp.arange(n) < k).astype(jnp.float32)
+    avg = jnp.sum(vals * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return avg, vals[0]
+
+
+def _switch_tensor(ts: Dict[str, Array], w: Array, strategy: Array,
+                   qcfg: QuantConfig) -> Dict[str, Array]:
+    """PushDown + PushUp for one tensor (possibly per-layer-stacked)."""
+    per_layer = bool(ts["wl"].shape)
+
+    def one(w_slice, wl, fl, lb, res, count, norm_sum, gsum_norm, sp):
+        should = count >= lb
+        ds = pushup.gradient_diversity(norm_sum, gsum_norm)
+        flat = pushdown.subsample(w_slice.reshape(-1).astype(jnp.float32),
+                                  qcfg.edf_sample)
+        wl_min, fl_min = pushdown.push_down(
+            flat, res, r_upr=qcfg.r_upr, eps_kl=qcfg.eps_kl, max_wl=qcfg.max_wl)
+        wl_new, fl_new = pushup.push_up(
+            wl_min, fl_min, ds, strategy, buff=qcfg.buff, max_wl=qcfg.max_wl)
+        lb_new = pushup.adapt_lookback(lb, ds, lb_lwr=qcfg.lb_lwr,
+                                       lb_upr=qcfg.lb_upr, gamma=qcfg.gamma)
+        res_new = pushup.adapt_resolution(res, lb_new, lb_lwr=qcfg.lb_lwr,
+                                          lb_upr=qcfg.lb_upr,
+                                          r_lwr=qcfg.r_lwr, r_upr=qcfg.r_upr)
+        # measure sparsity of the quantized-at-new-precision weights
+        qw = fxp.quantize(flat, wl_new, fl_new, u=None)
+        sp_new = fxp.sparsity(qw)
+        pick = lambda a, b: jnp.where(should, a, b)
+        return (pick(wl_new, wl), pick(fl_new, fl), pick(lb_new, lb),
+                pick(res_new, res), pick(jnp.int32(0), count),
+                pick(jnp.float32(0.0), norm_sum), pick(sp_new, sp))
+
+    gsum = ts["grad_sum"].astype(jnp.float32)
+    if per_layer:
+        axes = tuple(range(1, gsum.ndim))
+        gsum_norm = jnp.sqrt(jnp.sum(gsum * gsum, axis=axes) + 1e-30)
+        outs = jax.vmap(one)(w, ts["wl"], ts["fl"], ts["lb"], ts["res"],
+                             ts["count"], ts["norm_sum"], gsum_norm, ts["sp"])
+    else:
+        gsum_norm = jnp.sqrt(jnp.sum(gsum * gsum) + 1e-30)
+        outs = one(w, ts["wl"], ts["fl"], ts["lb"], ts["res"],
+                   ts["count"], ts["norm_sum"], gsum_norm, ts["sp"])
+    wl, fl, lb, res, count, norm_sum, sp = outs
+    should = ts["count"] >= ts["lb"]
+    bshape = should.shape + (1,) * (gsum.ndim - should.ndim)
+    grad_sum = jnp.where(should.reshape(bshape), 0.0, gsum).astype(jnp.bfloat16)
+    return {"wl": wl, "fl": fl, "lb": lb, "res": res, "count": count,
+            "norm_sum": norm_sum, "grad_sum": grad_sum, "sp": sp}
+
+
+def precision_switch(state: Dict[str, Any], params: PyTree,
+                     qcfg: QuantConfig) -> Dict[str, Any]:
+    """Alg. 2: AdaptStrategy, then per tensor Adapt{Lookback,Resolution} +
+    PushDown + PushUp where the window is full."""
+    lb_avg = _avg_lookback(state)
+    loss_avg, loss_now = _loss_stats(state, lb_avg)
+    strategy = pushup.adapt_strategy(state["strategy"], loss_avg, loss_now)
+
+    flat = dict(
+        (path_str(p), w) for p, w in jax.tree_util.tree_flatten_with_path(params)[0])
+    tensors = {
+        path: _switch_tensor(ts, flat[path].astype(jnp.float32), strategy, qcfg)
+        for path, ts in state["tensors"].items()
+    }
+    return {**state, "tensors": tensors, "strategy": strategy}
+
+
+# ---------------------------------------------------------------------------
+# Quantized copy for the forward pass (alg. 1 ln. 9-11)
+
+
+def _leaf_key(key: Array, path: str) -> Array:
+    # stable per-path fold; cheap non-cryptographic hash of the path string
+    h = 0
+    for ch in path:
+        h = (h * 131 + ord(ch)) % (2 ** 31 - 1)
+    return jax.random.fold_in(key, h)
+
+
+def quantize_params(params: PyTree, state: Dict[str, Any], qcfg: QuantConfig,
+                    key: Array | None = None, dtype=jnp.float32,
+                    shardings: PyTree | None = None) -> PyTree:
+    """Return the quantized copy L̂ of the master params (grid values in a
+    ``dtype`` container). Non-quantized leaves are passed through in
+    ``dtype``.
+
+    ``shardings``: optional NamedSharding tree (same structure as params).
+    The SR noise is constrained to each tensor's sharding — without this
+    GSPMD resolves (sharded master × replicated noise) by ALL-GATHERING the
+    f32 master before quantizing (measured: the entire 5.6 TiB/step arctic
+    gather volume ran in f32 regardless of container dtype; §Perf).
+
+    ``dtype=jnp.int8`` emits the native-int8 path: round(w·2^FL) lives as an
+    int8 tensor in the graph (exact for WL≤8), dequantized to bf16 at the
+    consumer — FSDP/TP weight movement happens on 1-byte payloads.
+    """
+    tensors = state["tensors"]
+    int8 = dtype == jnp.int8
+    out_dtype = jnp.bfloat16 if int8 else dtype
+    flat_sh = None
+    if shardings is not None:
+        flat_sh = dict(
+            (path_str(p), s) for p, s in
+            jax.tree_util.tree_flatten_with_path(shardings)[0])
+
+    def visit(path, leaf):
+        p = path_str(path)
+        if p not in tensors:
+            return leaf.astype(out_dtype)
+        ts = tensors[p]
+        wl, fl = ts["wl"], ts["fl"]
+        if wl.shape:  # stacked: broadcast (L,) -> (L,1,...)
+            bshape = wl.shape + (1,) * (leaf.ndim - 1)
+            wl = wl.reshape(bshape)
+            fl = fl.reshape(bshape)
+        u = None
+        if qcfg.stochastic_rounding and key is not None:
+            u = fxp.uniform_noise_like(_leaf_key(key, p), leaf)
+            if flat_sh is not None and p in flat_sh:
+                u = jax.lax.with_sharding_constraint(u, flat_sh[p])
+        if int8:
+            scale = jnp.exp2(jnp.asarray(fl, jnp.float32))
+            x = leaf.astype(jnp.float32) * scale
+            q = fxp.stochastic_round(x, u) if u is not None else jnp.round(x)
+            q = jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
+            return (q.astype(jnp.bfloat16)
+                    * jnp.exp2(-jnp.asarray(fl, jnp.bfloat16)))
+        return fxp.quantize(leaf, wl, fl, u=u).astype(out_dtype)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+# ---------------------------------------------------------------------------
+# Packed int8 wire format (native_int8 / §Perf): the quantized copy travels
+# the mesh as int8 + per-layer scale; dequant happens AFTER the per-layer
+# FSDP gather (inside the scan body), so weight movement costs 1 byte/param
+# instead of 4 (f32 container) — AdaPT's low-bit forward applied to the
+# *interconnect*. Gradients route through a custom_vjp to a bf16 reference
+# tensor that the forward never reads (so it is DCE'd — no extra traffic).
+
+
+def quantize_params_packed(params: PyTree, state: Dict[str, Any],
+                           qcfg: QuantConfig, key: Array | None = None,
+                           shardings: PyTree | None = None) -> PyTree:
+    """Lazy packed tree: quantized leaves become {"q8", "sc", "wref"} dicts
+    (see fixed_point.PACKED_KEYS); consumers call fxp.unpack_tree AT the use
+    site — inside the scanned layer body, after the per-layer gather — so
+    weights cross the mesh as int8 (4× less than the f32 container).
+    Differentiate w.r.t. this tree: cotangents land on each "wref"."""
+    tensors = state["tensors"]
+    flat_sh = None
+    if shardings is not None:
+        flat_sh = dict(
+            (path_str(p), s) for p, s in
+            jax.tree_util.tree_flatten_with_path(shardings)[0])
+
+    def visit(path, leaf):
+        p = path_str(path)
+        if p not in tensors:
+            return leaf.astype(jnp.bfloat16)
+        ts = tensors[p]
+        fl = ts["fl"]
+        if fl.shape:
+            fl = fl.reshape(fl.shape + (1,) * (leaf.ndim - 1))
+        u = None
+        if qcfg.stochastic_rounding and key is not None:
+            u = fxp.uniform_noise_like(_leaf_key(key, p), leaf)
+            if flat_sh is not None and p in flat_sh:
+                u = jax.lax.with_sharding_constraint(u, flat_sh[p])
+        scale = jnp.exp2(jnp.asarray(fl, jnp.float32))
+        x = leaf.astype(jnp.float32) * scale
+        q = fxp.stochastic_round(x, u) if u is not None else jnp.round(x)
+        q8 = jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
+        sc = jnp.exp2(-jnp.asarray(fl, jnp.bfloat16))
+        wref = jnp.zeros(leaf.shape, jnp.bfloat16)
+        if flat_sh is not None and p in flat_sh:
+            q8 = jax.lax.with_sharding_constraint(q8, flat_sh[p])
+            wref = jax.lax.with_sharding_constraint(wref, flat_sh[p])
+        return {"q8": q8, "sc": sc, "wref": wref}
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def strip_packed_grads(grads: PyTree) -> PyTree:
+    """Grad tree of a packed qparams tree → plain per-param grads (each
+    packed dict's cotangent lives in its "wref"; q8 carries float0)."""
+    return jax.tree_util.tree_map(
+        lambda g: g["wref"] if isinstance(g, dict)
+        and frozenset(g) == fxp.PACKED_KEYS else g,
+        grads,
+        is_leaf=lambda g: isinstance(g, dict)
+        and frozenset(g) == fxp.PACKED_KEYS)
+
+
+def snapshot(state: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:
+    """Host-side summary {path: {wl, fl, sp, lb, res}} for logging and the
+    paper's analytical performance model (eq. 6–9 need lb and r too)."""
+    out = {}
+    for path, ts in state["tensors"].items():
+        out[path] = {
+            "wl": jax.device_get(ts["wl"]),
+            "fl": jax.device_get(ts["fl"]),
+            "sp": jax.device_get(ts["sp"]),
+            "lb": jax.device_get(ts["lb"]),
+            "res": jax.device_get(ts["res"]),
+        }
+    return out

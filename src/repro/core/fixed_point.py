@@ -1,0 +1,169 @@
+"""Fixed-point ⟨WL, FL⟩ quantization with stochastic rounding (paper §2.1, §3.2).
+
+A signed fixed-point number with word length ``WL`` and fractional length
+``FL`` represents values q / 2**FL with integer q in [-2**(WL-1), 2**(WL-1)-1].
+
+Everything here is jit-friendly: WL/FL are *runtime* int32 scalars/arrays so
+AdaPT precision switches never trigger recompilation. Quantized values live in
+a float32 container ("simulate" mode — exactly what the paper did via QPyTorch)
+or as int8 + scale ("native_int8" mode, TPU MXU path).
+
+Stochastic rounding follows Hopkins et al. [50]: round x down with probability
+1 - frac(x), up with probability frac(x). Uniform bits are supplied externally
+(jax.random) so the op stays deterministic under a fixed key and matches the
+Pallas kernel, which consumes identical bits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+MAX_WL = 32
+
+
+def fxp_bounds(wl: Array) -> tuple[Array, Array]:
+    """(qmin, qmax) integer bounds of a signed WL-bit word; f32 to allow WL>24."""
+    wl = jnp.asarray(wl, jnp.float32)
+    qmax = jnp.exp2(wl - 1.0) - 1.0
+    return -qmax - 1.0, qmax
+
+
+def stochastic_round(x: Array, u: Array) -> Array:
+    """SR(x): floor(x) + (u < frac(x)). ``u`` ~ U[0,1) with x's shape."""
+    f = jnp.floor(x)
+    return f + (u < (x - f)).astype(x.dtype)
+
+
+def quantize(w: Array, wl: Array, fl: Array, *, u: Array | None = None) -> Array:
+    """Quantize to the ⟨WL,FL⟩ grid, returning values on the grid (f32 container).
+
+    ``u`` supplies uniform [0,1) noise for stochastic rounding; ``None`` means
+    round-to-nearest (used by PushDown's KL probe, which must be deterministic).
+    WL/FL may be scalars or broadcastable arrays (e.g. per-scanned-layer (L,1,1)).
+    """
+    w = w.astype(jnp.float32)
+    scale = jnp.exp2(jnp.asarray(fl, jnp.float32))
+    qmin, qmax = fxp_bounds(wl)
+    x = w * scale
+    if u is None:
+        q = jnp.round(x)
+    else:
+        q = stochastic_round(x, u.astype(jnp.float32))
+    q = jnp.clip(q, qmin, qmax)
+    return q / scale
+
+
+def quantize_int8(w: Array, fl: Array, *, u: Array | None = None) -> tuple[Array, Array]:
+    """Native path: quantize to int8 storage (WL<=8 enforced by clip) + scale 2^-FL.
+
+    Returns (q_int8, scale) with dequant = q * scale.
+    """
+    w = w.astype(jnp.float32)
+    scale = jnp.exp2(jnp.asarray(fl, jnp.float32))
+    x = w * scale
+    q = jnp.round(x) if u is None else stochastic_round(x, u.astype(jnp.float32))
+    q = jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
+    return q, (1.0 / scale).astype(jnp.float32)
+
+
+def required_integer_bits(w: Array, axes=None) -> Array:
+    """IL bits needed to represent max|w| without overflow (excl. sign bit)."""
+    amax = jnp.max(jnp.abs(w), axis=axes) if axes is not None else jnp.max(jnp.abs(w))
+    amax = jnp.maximum(amax, 1e-12)
+    return jnp.maximum(jnp.ceil(jnp.log2(amax + 1e-12)), 0.0).astype(jnp.int32)
+
+
+def fl_for_wl(w_absmax: Array, wl: Array) -> Array:
+    """Largest FL for word length WL s.t. max|w| is representable: FL = WL-1-IL."""
+    il = jnp.maximum(jnp.ceil(jnp.log2(jnp.maximum(w_absmax, 1e-12))), 0.0)
+    return jnp.asarray(wl, jnp.int32) - 1 - il.astype(jnp.int32)
+
+
+def quantize_activation(a: Array, wl: Array, *, u: Array | None = None,
+                        buff: int = 0) -> Array:
+    """Dynamic-range activation quantization (paper quantizes activations too).
+
+    FL is derived per call from the batch's abs-max so the value range always
+    fits; ``buff`` extra integer headroom bits guard accumulation overflow.
+    Differentiable via the straight-through estimator (round has zero
+    gradient; STE passes the incoming cotangent through unchanged — the
+    standard treatment [34] the paper's training relies on).
+    """
+    amax = jnp.max(jnp.abs(jax.lax.stop_gradient(a)))
+    fl = fl_for_wl(amax, wl) - buff
+    q = quantize(jax.lax.stop_gradient(a), wl, fl, u=u).astype(a.dtype)
+    return a + jax.lax.stop_gradient(q - a)  # STE
+
+
+def uniform_noise_like(key: Array, x: Array) -> Array:
+    return jax.random.uniform(key, x.shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Packed int8 wire format (native_int8 §Perf): a quantized tensor travels as
+# {"q8": int8, "sc": bf16 scale, "wref": bf16 zeros}. Dequant happens at the
+# USE site (inside the scanned layer body, after the per-layer FSDP gather),
+# so cross-chip weight movement costs 1 byte/param. Gradients route through
+# the custom_vjp to "wref" — the straight-through read of paper alg. 1.
+
+PACKED_KEYS = frozenset(("q8", "sc", "wref"))
+
+
+def is_packed(leaf) -> bool:
+    return isinstance(leaf, dict) and frozenset(leaf) == PACKED_KEYS
+
+
+@jax.custom_vjp
+def dequant_packed(q8: Array, sc: Array, wref: Array) -> Array:
+    del wref
+    return q8.astype(jnp.bfloat16) * sc
+
+
+def _dequant_fwd(q8, sc, wref):
+    return dequant_packed(q8, sc, wref), sc
+
+
+def _dequant_bwd(sc, g):
+    import numpy as np
+    return (np.zeros(g.shape, jax.dtypes.float0),
+            jnp.zeros_like(sc),
+            g.astype(jnp.bfloat16))
+
+
+dequant_packed.defvjp(_dequant_fwd, _dequant_bwd)
+
+
+def unpack_tree(tree):
+    """Dequantize every packed leaf in a (sub)tree; plain leaves pass.
+
+    If the sharding rules carry '#packed_slice_specs' (path-suffix →
+    NamedSharding), the int8 payload is constrained to that (TP-only) spec
+    FIRST — this pins the FSDP all-gather onto the 1-byte tensor; without
+    it GSPMD reshards after the dequant-multiply and the wire carries bf16
+    (measured on arctic-480b; EXPERIMENTS.md §Perf)."""
+    from repro import sharding as _sh
+    specs = _sh.flag("#packed_slice_specs") or {}
+
+    def visit(path, leaf):
+        if not is_packed(leaf):
+            return leaf
+        q8 = leaf["q8"]
+        if specs:
+            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                           for k in path)
+            for suffix, spec in specs.items():
+                if key.endswith(suffix) and \
+                        len(spec.spec) == q8.ndim:
+                    q8 = jax.lax.with_sharding_constraint(q8, spec)
+                    break
+        return dequant_packed(q8, leaf["sc"], leaf["wref"])
+
+    return jax.tree_util.tree_map_with_path(visit, tree, is_leaf=is_packed)
+
+
+def sparsity(w: Array, axes=None, eps: float = 0.0) -> Array:
+    """Fraction of non-zero elements (paper's sp^l). eps treats |w|<=eps as zero."""
+    nz = (jnp.abs(w) > eps).astype(jnp.float32)
+    return jnp.mean(nz, axis=axes)

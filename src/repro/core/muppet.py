@@ -1,0 +1,112 @@
+"""MuPPET baseline (paper §2.2) — the comparison system AdaPT is evaluated
+against, implemented so the benchmark tables have a real baseline.
+
+MuPPET: block-floating-point quantization with a *global* word length WL^net
+and per-layer scale factors, precision switched *upward only* between epochs
+by an inter-epoch gradient-diversity ratio test. Quantization levels are a
+fixed ladder (the MuPPET paper uses 8→12→14→16 → float32).
+
+    s = | log2 min((UB+0.5)/X_max, (LB-0.5)/X_min) |        (per-layer scale)
+    x_q = floor(x · 2^s + Unif(-0.5, 0.5))                  (stochastic)
+    Δs(w)^j = Σ_l [ Σ_k ‖∇f_l^k‖² / ‖Σ_k ∇f_l^k‖² ] / |L|   (epoch j, window r)
+    p = max S(j) / Δs(w)^j ;  switch when p > threshold ρ times
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+LADDER = (8, 12, 14, 16, 32)  # 32 == float32 final level
+
+
+def block_fp_scale(x: Array, wl: int) -> Array:
+    """Per-tensor shared exponent s (paper eq. in §2.2)."""
+    ub = 2.0 ** (wl - 1) - 1.0
+    lb = -(2.0 ** (wl - 1))
+    xmax = jnp.maximum(jnp.max(x), 1e-12)
+    xmin = jnp.minimum(jnp.min(x), -1e-12)
+    s = jnp.log2(jnp.minimum((ub + 0.5) / xmax, (lb - 0.5) / xmin))
+    return jnp.abs(jnp.floor(s))
+
+
+def quantize_block_fp(x: Array, wl: int, u: Array | None = None) -> Array:
+    """Block-floating-point quantize with shared scale; float32 container."""
+    if wl >= 32:
+        return x.astype(jnp.float32)
+    s = block_fp_scale(x, wl)
+    scale = jnp.exp2(s)
+    noise = (u - 0.5) if u is not None else 0.0
+    q = jnp.floor(x.astype(jnp.float32) * scale + 0.5 + noise)
+    q = jnp.clip(q, -(2.0 ** (wl - 1)), 2.0 ** (wl - 1) - 1.0)
+    return q / scale
+
+
+def init_state(num_layers: int, r: int = 3, threshold: float = 1.15,
+               violations_needed: int = 2) -> Dict[str, Any]:
+    return {
+        "level": jnp.int32(0),                  # index into LADDER
+        "epoch_in_level": jnp.int32(0),
+        "violations": jnp.int32(0),
+        "norm_sq_sum": jnp.zeros((num_layers,), jnp.float32),
+        "diversity_hist": jnp.zeros((64,), jnp.float32),
+        "hist_len": jnp.int32(0),
+        "threshold": jnp.float32(threshold),
+        "violations_needed": jnp.int32(violations_needed),
+        "r": jnp.int32(r),
+    }
+
+
+def epoch_diversity(norm_sq_sum: Array, grad_sum_norm_sq: Array) -> Array:
+    """Σ_l ‖·‖²/‖Σ·‖² / |L| from per-layer accumulators."""
+    per_layer = norm_sq_sum / jnp.maximum(grad_sum_norm_sq, 1e-30)
+    return jnp.mean(per_layer)
+
+
+def end_of_epoch(state: Dict[str, Any], diversity: Array) -> Dict[str, Any]:
+    """Inter-epoch switch decision: p = max S(j) / Δs^j > τ counts a violation;
+    `violations_needed` violations trigger a level-up (never down)."""
+    h = state["diversity_hist"]
+    n = state["hist_len"]
+    h = jax.lax.dynamic_update_index_in_dim(h, diversity, jnp.minimum(n, 63), 0)
+    n = jnp.minimum(n + 1, 64)
+    mask = jnp.arange(64) < n
+    smax = jnp.max(jnp.where(mask, h, -jnp.inf))
+    p = smax / jnp.maximum(diversity, 1e-30)
+    violated = p > state["threshold"]
+    violations = jnp.where(violated, state["violations"] + 1, state["violations"])
+    do_switch = violations >= state["violations_needed"]
+    new_level = jnp.minimum(state["level"] + do_switch.astype(jnp.int32),
+                            len(LADDER) - 1)
+    return {
+        **state,
+        "level": new_level,
+        "violations": jnp.where(do_switch, 0, violations),
+        "diversity_hist": jnp.where(do_switch, jnp.zeros_like(h), h),
+        "hist_len": jnp.where(do_switch, 0, n),
+        "epoch_in_level": jnp.where(do_switch, 0, state["epoch_in_level"] + 1),
+    }
+
+
+def current_wl(state: Dict[str, Any]):
+    return jnp.asarray(LADDER, jnp.int32)[state["level"]]
+
+
+def quantize_params(params, state: Dict[str, Any], key: Array | None = None):
+    """Quantize all >=2D leaves at the current global level (block-FP)."""
+    level = jax.device_get(state["level"]).item()
+    wl = LADDER[level]
+
+    def visit(path, leaf):
+        if leaf.ndim < 2 or wl >= 32:
+            return leaf.astype(jnp.float32)
+        u = None
+        if key is not None:
+            u = jax.random.uniform(jax.random.fold_in(key, abs(hash(str(path))) % (2**31)),
+                                   leaf.shape, jnp.float32)
+        return quantize_block_fp(leaf, wl, u)
+
+    return jax.tree_util.tree_map_with_path(visit, params)

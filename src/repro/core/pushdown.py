@@ -1,0 +1,96 @@
+"""PushDown operation (paper alg. 3): smallest ⟨WL,FL⟩ with no information loss.
+
+The paper bins the master weights W and their quantized counterpart Ŵ into an
+empirical distribution function at per-layer resolution r^l and reads the
+discrete KL divergence KL(P‖Q) as "bits lost by the encoding change"; bisection
+finds the smallest word length with KL ≈ 0.
+
+TPU adaptation (DESIGN.md §3):
+  * The EDF is estimated on a deterministic strided subsample (≤ cfg.edf_sample
+    elements) — our tensors are 10^6–10^9 elements, the paper's ≤ 4.7M.
+  * Instead of sequential bisection we evaluate the whole WL ladder in one
+    vectorized pass (WL ∈ {2..16, 20, 24, 32}) and take the smallest feasible
+    word — same optimum, no data-dependent control flow, vmap/scan friendly.
+  * Histograms use a static r_upr-bin buffer masked down to the live r^l bins
+    (dynamic shapes are impossible under jit).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixed_point as fxp
+
+Array = jax.Array
+
+# WL candidate ladder, ascending. Covers every width the paper can reach.
+WL_LADDER = tuple(range(2, 17)) + (20, 24, 32)
+
+
+def subsample(flat: Array, n: int) -> Array:
+    """Deterministic strided subsample to at most n elements (static shape)."""
+    size = flat.shape[0]
+    if size <= n:
+        return flat
+    stride = size // n
+    return jax.lax.slice(flat, (0,), (n * stride,), (stride,))
+
+
+def _histogram(x: Array, lo: Array, hi: Array, r: Array, r_upr: int) -> Array:
+    """Masked histogram: r live bins inside a static r_upr-bin buffer."""
+    span = jnp.maximum(hi - lo, 1e-12)
+    rf = r.astype(jnp.float32)
+    idx = jnp.clip(jnp.floor((x - lo) / span * rf), 0, rf - 1).astype(jnp.int32)
+    counts = jnp.zeros((r_upr,), jnp.float32).at[idx].add(1.0)
+    return counts
+
+
+def kl_bits(p_counts: Array, q_counts: Array) -> Array:
+    """KL(P‖Q) in bits with add-one smoothing on the support union."""
+    p = p_counts + 1e-6
+    q = q_counts + 1e-6
+    p = p / jnp.sum(p)
+    q = q / jnp.sum(q)
+    return jnp.sum(p * (jnp.log2(p) - jnp.log2(q)))
+
+
+def kl_for_wl(w: Array, wl: Array, r: Array, r_upr: int) -> tuple[Array, Array]:
+    """KL(quantized ‖ original) for one candidate word length.
+
+    FL is range-derived (largest FL that still represents max|w|), matching
+    fixed-point semantics: ⟨WL,FL⟩ must frame the value range.
+    Returns (kl_bits, fl).
+    """
+    amax = jnp.max(jnp.abs(w))
+    fl = fxp.fl_for_wl(amax, wl)
+    q = fxp.quantize(w, wl, fl, u=None)  # deterministic probe
+    lo, hi = jnp.min(w), jnp.max(w)
+    hq = _histogram(q, lo, hi, r, r_upr)
+    hw = _histogram(w, lo, hi, r, r_upr)
+    return kl_bits(hq, hw), fl
+
+
+def push_down(w_flat: Array, r: Array, *, r_upr: int, eps_kl: float,
+              max_wl: int = 32) -> tuple[Array, Array]:
+    """Smallest ⟨WL_min, FL_min⟩ with KL < eps_kl over the WL ladder.
+
+    w_flat: pre-subsampled 1-D f32 view of the tensor.
+    Returns int32 scalars (wl_min, fl_min).
+    """
+    ladder = jnp.asarray(WL_LADDER, jnp.int32)
+
+    def probe(wl):
+        return kl_for_wl(w_flat, wl, r, r_upr)
+
+    kls, fls = jax.vmap(probe)(ladder)
+    ok = (kls < eps_kl) & (ladder <= max_wl)
+    # First feasible index; fall back to the widest allowed word.
+    first = jnp.argmax(ok)                       # 0 if none ok, guard below
+    any_ok = jnp.any(ok)
+    widest = jnp.int32(len(WL_LADDER) - 1)
+    idx = jnp.where(any_ok, first, widest)
+    wl_min = ladder[idx]
+    fl_min = fls[idx]
+    wl_min = jnp.minimum(wl_min, max_wl).astype(jnp.int32)
+    fl_min = jnp.clip(fl_min, 0, wl_min - 1).astype(jnp.int32)
+    return wl_min, fl_min

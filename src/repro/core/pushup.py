@@ -1,0 +1,96 @@
+"""PushUp operation + strategy/lookback/resolution adaptation (paper §3.3).
+
+Gradient diversity over the last lb batches:
+    Δs = Σ_k ‖∇f_k‖₂ / ‖Σ_k ∇f_k‖₂            (eq. 3, per layer)
+    Δs̃ = log Δs if 0 < Δs < ∞ else 1           (eq. between 3 and 4)
+
+If Δs̃ > 0 two precision-increase suggestions are combined by strategy st:
+    s1 = max(⌈1 / (log Δs − 1)⌉, 1)
+    s2 = max(min(32·log²Δs − 1, 32) − FL_min, 1)
+    s  = min/mean/max(s1, s2)                   (eq. 4)
+else s = 1.
+
+New precision (with the paper's buffer-bit overflow guard folded in; the
+paper states two slightly inconsistent update formulas — we adopt the reading
+"FL = FL_min + s capped so that `buff` integer headroom bits remain, WL wraps
+FL plus headroom", which satisfies both formulas' intent):
+    FL = min(FL_min + s, max_wl − buff)
+    WL = clip(max(WL_min, FL + 1) + buff, 2, max_wl)
+
+Strategy adaptation (eq. 5) on the loss trend, lookback adaptation with
+momentum γ, resolution adaptation when lookback saturates.
+
+TPU adaptation: Δs is computed from windowed accumulators (Σ‖g‖ scalar +
+Σg tensor) rather than a stored list of gradients — see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+ST_MIN, ST_MEAN, ST_MAX = 0, 1, 2
+
+
+def gradient_diversity(norm_sum: Array, grad_sum_norm: Array) -> Array:
+    """Δs from windowed accumulators; Δs ≥ 1 by the triangle inequality."""
+    return norm_sum / jnp.maximum(grad_sum_norm, 1e-20)
+
+
+def suggestions(delta_s: Array, fl_min: Array, max_wl: int = 32) -> tuple[Array, Array]:
+    log_ds = jnp.log(jnp.maximum(delta_s, 1e-20))
+    s1 = jnp.ceil(1.0 / jnp.where(jnp.abs(log_ds - 1.0) < 1e-6, 1e-6, log_ds - 1.0))
+    s1 = jnp.maximum(s1, 1.0)
+    s2 = jnp.maximum(jnp.minimum(32.0 * log_ds * log_ds - 1.0, float(max_wl))
+                     - fl_min.astype(jnp.float32), 1.0)
+    return s1, s2
+
+
+def combine(s1: Array, s2: Array, strategy: Array) -> Array:
+    """Combine suggestions under st ∈ {min, mean, max} (eq. 4)."""
+    choices = jnp.stack([jnp.minimum(s1, s2),
+                         jnp.ceil(0.5 * (s1 + s2)),
+                         jnp.maximum(s1, s2)])
+    return choices[strategy]
+
+
+def push_up(wl_min: Array, fl_min: Array, delta_s: Array, strategy: Array,
+            *, buff: int, max_wl: int = 32) -> tuple[Array, Array]:
+    """Returns new (WL, FL) int32 for one layer/tensor."""
+    log_ds = jnp.log(jnp.maximum(delta_s, 1e-20))
+    s1, s2 = suggestions(delta_s, fl_min, max_wl)
+    s = jnp.where(log_ds > 0.0, combine(s1, s2, strategy), 1.0)
+    fl = jnp.minimum(fl_min.astype(jnp.float32) + s, float(max_wl - buff))
+    wl = jnp.maximum(wl_min.astype(jnp.float32), fl + 1.0) + float(buff)
+    wl = jnp.clip(wl, 2.0, float(max_wl))
+    fl = jnp.clip(fl, 0.0, wl - 1.0)
+    return wl.astype(jnp.int32), fl.astype(jnp.int32)
+
+
+def adapt_strategy(strategy: Array, loss_avg: Array, loss_now: Array) -> Array:
+    """Eq. 5: escalate (min→mean→max) while loss stagnates, reset to min when
+    it improves."""
+    stagnating = jnp.abs(loss_avg) <= jnp.abs(loss_now)
+    escalated = jnp.minimum(strategy + 1, ST_MAX)
+    return jnp.where(stagnating, escalated, ST_MIN).astype(jnp.int32)
+
+
+def adapt_lookback(lb: Array, delta_s: Array, *, lb_lwr: int, lb_upr: int,
+                   gamma: float) -> Array:
+    """lb_new = clip(⌈lb_upr/Δs⌉) with momentum γ (paper §3.3)."""
+    finite = (delta_s > 0) & jnp.isfinite(delta_s)
+    lb_new = jnp.where(
+        finite,
+        jnp.clip(jnp.ceil(float(lb_upr) / jnp.maximum(delta_s, 1e-20)),
+                 lb_lwr, lb_upr),
+        float(lb_upr))
+    out = jnp.ceil(lb_new * gamma + (1.0 - gamma) * lb.astype(jnp.float32))
+    return jnp.clip(out, lb_lwr, lb_upr).astype(jnp.int32)
+
+
+def adapt_resolution(r: Array, lb: Array, *, lb_lwr: int, lb_upr: int,
+                     r_lwr: int, r_upr: int) -> Array:
+    """r += 1 when lookback saturates high, r -= 1 when it saturates low."""
+    delta = jnp.where(lb >= lb_upr, 1, jnp.where(lb <= lb_lwr, -1, 0))
+    return jnp.clip(r + delta, r_lwr, r_upr).astype(jnp.int32)

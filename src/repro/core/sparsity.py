@@ -1,0 +1,50 @@
+"""Sparsifying regularization (paper §3.4, "Inducing Sparsity").
+
+    L̂(W) = L + α‖W‖₁ + (β/2)‖W‖₂² + P,   P = Σ_l (WL^l / 32) · sp^l
+
+L1 drives small weights toward zero (they then quantize to exact zeros at low
+FL); the P penalty charges the model for word length × density, discouraging
+learning steps that need wider words or denser tensors. WL and sp enter P with
+stop_gradient (they are discrete controller outputs, not differentiable).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.controller import path_str
+
+Array = jax.Array
+
+
+def elastic_net(params, alpha: float, beta: float, quantized_paths) -> Array:
+    """α Σ‖W‖₁ + β/2 Σ‖W‖₂² over quantized tensors only."""
+    total = jnp.float32(0.0)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        if path_str(path) not in quantized_paths:
+            continue
+        w = leaf.astype(jnp.float32)
+        total = total + alpha * jnp.sum(jnp.abs(w)) + 0.5 * beta * jnp.sum(w * w)
+    return total
+
+
+def wordlength_penalty(adapt_state: Dict[str, Any], max_wl: int = 32) -> Array:
+    """P = mean_l (WL^l/32 · sp^l); mean (not sum) keeps the coefficient
+    architecture-size independent."""
+    terms = []
+    for ts in adapt_state["tensors"].values():
+        wl = jax.lax.stop_gradient(ts["wl"]).astype(jnp.float32)
+        sp = jax.lax.stop_gradient(ts["sp"])
+        terms.append(jnp.mean(wl / float(max_wl) * sp))
+    if not terms:
+        return jnp.float32(0.0)
+    return jnp.mean(jnp.stack(terms))
+
+
+def adapt_loss(task_loss: Array, params, adapt_state, *, alpha: float,
+               beta: float, penalty_coef: float, max_wl: int = 32) -> Array:
+    reg = elastic_net(params, alpha, beta, set(adapt_state["tensors"].keys()))
+    pen = penalty_coef * wordlength_penalty(adapt_state, max_wl)
+    return task_loss + reg + pen

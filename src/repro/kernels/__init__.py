@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for AdaPT's compute hot spots (+ ops dispatch, ref oracles)."""

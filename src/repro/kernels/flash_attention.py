@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: blocked (flash) attention forward.
+
+The 32k-prefill shapes are attention-dominated: naive attention materializes
+a (Sq × Skv) = 32k×32k f32 logits tensor per head (4 GB) — far beyond VMEM
+and a pure HBM-bandwidth disaster. This kernel runs the standard online-
+softmax block scheme: for each (batch, head, q-block) the (m, l, acc) state
+stays in VMEM while kv-blocks stream through, so HBM traffic is O(S·D)
+instead of O(S²).
+
+Features needed by the assigned archs, all fused:
+  * causal masking with end-alignment (decode/prefill-with-cache friendly)
+  * sliding-window masking (mixtral SWA, gemma2 local layers)
+  * logit softcapping   (gemma2: softcap · tanh(logits / softcap))
+  * GQA via kv-head index mapping (no jnp.repeat materialization)
+
+Grid: (B, H, nq, nk), kv innermost ("arbitrary"), MXU-aligned q/kv blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, softcap: float,
+                  bq: int, bk: int, nk: int, q_offset: int):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bk, D)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    logits *= scale
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    qpos = (iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            + q_offset)                           # absolute key-space position
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(logits, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new)                   # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)               # (bq, 1)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "scale", "bq", "bk", "interpret"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int = 0, softcap: float = 0.0,
+                    scale: float | None = None, bq: int = 512, bk: int = 512,
+                    interpret: bool = False) -> Array:
+    """q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D); returns (B, Sq, H, D).
+
+    Query positions are aligned to the *end* of the key space
+    (q_offset = Skv − Sq), matching prefill-with-cache and decode semantics.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = H // Hkv
+    sc = scale if scale is not None else (1.0 / D ** 0.5)
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    nq, nk = pl.cdiv(Sq, bq), pl.cdiv(Skv, bk)
+
+    qt = q.transpose(0, 2, 1, 3)                  # (B, H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)                  # (B, Hkv, Skv, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=sc, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, nk=nk, q_offset=Skv - Sq)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

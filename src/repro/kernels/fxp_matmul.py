@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: fixed-point (int8-stored) matmul with fused dequant.
+
+The AdaPT steady state keeps most layers at WL ≤ 8 (training starts at ⟨8,4⟩
+and PushDown pushes down), so the hot matmul is
+    y = x @ (wq · 2^-FL) (+ bias)
+with wq int8. Doing dequant-then-matmul in XLA materializes a full f32/bf16
+copy of the weights in HBM every step; this kernel streams int8 weight tiles
+into VMEM (4× less HBM traffic than f32, 2× less than bf16) and dequantizes
+in-register on the way into the MXU.
+
+Block scheme: grid (M/bm, N/bn, K/bk), K innermost so the f32 accumulator
+tile lives in a VMEM scratch across the K loop; MXU-aligned 128-multiples.
+
+A full-integer variant (``int8_matmul``) takes int8 activations too and
+accumulates in int32 — the v5e MXU's 2× int8 throughput path; used for
+serving (W8A8) and benchmarked in §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _fxp_matmul_kernel(x_ref, w_ref, scale_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)          # int8 -> f32 in-register
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] * scale_ref[0, 0]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                                             "out_dtype"))
+def fxp_matmul(x: Array, wq: Array, scale: Array, *, bm: int = 256,
+               bn: int = 256, bk: int = 512, out_dtype=None,
+               interpret: bool = False) -> Array:
+    """y = x @ (wq * scale).  x: (M,K) float; wq: (K,N) int8; scale: () f32."""
+    M, K = x.shape
+    K2, N = wq.shape
+    assert K == K2, (x.shape, wq.shape)
+    out_dtype = out_dtype or x.dtype
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    grid = (pl.cdiv(M, bm), pl.cdiv(N, bn), pl.cdiv(K, bk))
+    kernel = functools.partial(_fxp_matmul_kernel, nk=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(x, wq, scale.reshape(1, 1).astype(jnp.float32))
+
+
+def _int8_matmul_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * s_ref[0, 0]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def int8_matmul(xq: Array, wq: Array, sx: Array, sw: Array, *, bm: int = 256,
+                bn: int = 256, bk: int = 512, interpret: bool = False) -> Array:
+    """W8A8 path: (xq @ wq) * (sx*sw); int32 MXU accumulation, f32 out."""
+    M, K = xq.shape
+    _, N = wq.shape
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    grid = (pl.cdiv(M, bm), pl.cdiv(N, bn), pl.cdiv(K, bk))
+    kernel = functools.partial(_int8_matmul_kernel, nk=grid[2])
+    s = (sx.astype(jnp.float32) * sw.astype(jnp.float32)).reshape(1, 1)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(xq, wq, s)

@@ -1,0 +1,66 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+Each op picks the Pallas path on TPU (or when forced) and falls back to the
+pure-jnp oracle otherwise; `interpret=True` is used automatically on CPU so
+the kernels stay exercised (and tested) in this container.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import fxp_matmul as _fm
+from repro.kernels import kl_hist as _kh
+from repro.kernels import ref
+from repro.kernels import sr_quantize as _sq
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sr_quantize(x: Array, u: Array, wl, fl, *, use_pallas: bool = False) -> Array:
+    if use_pallas:
+        return _sq.sr_quantize(x, u, jnp.asarray(wl, jnp.int32),
+                               jnp.asarray(fl, jnp.int32),
+                               interpret=not _on_tpu())
+    return ref.ref_sr_quantize(x, u, wl, fl)
+
+
+def fxp_matmul(x: Array, wq: Array, scale: Array, *, use_pallas: bool = False,
+               bias: Array | None = None) -> Array:
+    if use_pallas:
+        out = _fm.fxp_matmul(x, wq, scale, interpret=not _on_tpu())
+        if bias is not None:
+            out = out + bias
+        return out
+    return ref.ref_fxp_matmul(x, wq, scale, bias)
+
+
+def int8_matmul(xq: Array, wq: Array, sx: Array, sw: Array, *,
+                use_pallas: bool = False) -> Array:
+    if use_pallas:
+        return _fm.int8_matmul(xq, wq, sx, sw, interpret=not _on_tpu())
+    return ref.ref_int8_matmul(xq, wq, sx, sw)
+
+
+def kl_hist(w: Array, q: Array, num_bins: int = 256, *,
+            use_pallas: bool = False) -> Array:
+    if use_pallas:
+        return _kh.kl_hist(w, q, num_bins=num_bins, interpret=not _on_tpu())
+    return ref.ref_kl_hist(w, q, num_bins)
+
+
+def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+              window: int = 0, softcap: float = 0.0,
+              scale: float | None = None, use_pallas: bool = False,
+              bq: int = 512, bk: int = 512) -> Array:
+    if use_pallas:
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale, bq=bq, bk=bk,
+                                   interpret=not _on_tpu())
+    return ref.ref_attention(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale)

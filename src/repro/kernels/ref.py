@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` function is the semantic ground truth the kernels are tested
+against (tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ref_sr_quantize(x: Array, u: Array, wl: int, fl: int) -> Array:
+    """Fixed-point ⟨WL,FL⟩ stochastic-round quantize (f32-container grid)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.float32(2.0) ** fl
+    qmax = jnp.float32(2.0) ** (wl - 1) - 1.0
+    s = xf * scale
+    f = jnp.floor(s)
+    q = f + (u.astype(jnp.float32) < (s - f)).astype(jnp.float32)
+    q = jnp.clip(q, -qmax - 1.0, qmax)
+    return (q / scale).astype(x.dtype)
+
+
+def ref_fxp_matmul(x: Array, wq: Array, scale: Array,
+                   bias: Array | None = None) -> Array:
+    """x @ (wq * scale) with f32 accumulation.
+
+    x: (M, K) float; wq: (K, N) int8 fixed-point words; scale: () or (N,) f32.
+    """
+    acc = jnp.dot(x.astype(jnp.float32), wq.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    out = acc * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def ref_int8_matmul(xq: Array, wq: Array, sx: Array, sw: Array) -> Array:
+    """Full int8×int8→int32 path: (xq @ wq) * sx * sw, f32 out."""
+    acc = jax.lax.dot_general(
+        xq, wq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * sx.astype(jnp.float32) * sw.astype(jnp.float32)
+
+
+def ref_kl_hist(w: Array, q: Array, num_bins: int) -> Array:
+    """Fused double histogram: counts (2, num_bins) of w and q over w's range."""
+    wf = w.astype(jnp.float32).reshape(-1)
+    qf = q.astype(jnp.float32).reshape(-1)
+    lo, hi = jnp.min(wf), jnp.max(wf)
+    span = jnp.maximum(hi - lo, 1e-12)
+
+    def hist(x):
+        idx = jnp.clip(jnp.floor((x - lo) / span * num_bins),
+                       0, num_bins - 1).astype(jnp.int32)
+        return jnp.zeros((num_bins,), jnp.float32).at[idx].add(1.0)
+
+    return jnp.stack([hist(wf), hist(qf)])
+
+
+def ref_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                  window: int = 0, softcap: float = 0.0,
+                  scale: float | None = None) -> Array:
+    """Multi-head attention oracle.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D). GQA via head-group broadcast.
+    window > 0: sliding-window causal mask. softcap > 0: tanh logit cap.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    sc = scale if scale is not None else (1.0 / D ** 0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * sc
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)   # align ends (decode-friendly)
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's fuel.
+
+``jax.eval_shape`` over the real init/data functions guarantees the specs
+can never drift from the actual runtime shapes, and allocates nothing (the
+full configs reach 480B parameters).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import Config, shape_kind
+from repro.data import synthetic
+from repro.models import transformer
+from repro.train import train_loop
+
+Array = jax.Array
+
+
+def state_specs(cfg: Config):
+    return jax.eval_shape(lambda: train_loop.init_state(cfg))
+
+
+def batch_specs(cfg: Config):
+    return jax.eval_shape(lambda: train_loop.make_batch(cfg, 0))
+
+
+def param_specs(cfg: Config):
+    return jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg.model))
+
+
+def decode_specs(cfg: Config) -> Dict[str, Any]:
+    """Inputs of one serve decode step: token batch + caches at seq_len."""
+    m, t = cfg.model, cfg.train
+    caches = jax.eval_shape(
+        lambda: transformer.init_caches(m, t.global_batch, t.seq_len))
+    return {
+        "qparams": param_specs(cfg),
+        "token": jax.ShapeDtypeStruct((t.global_batch,), jnp.int32),
+        "caches": caches,
+        "t": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def prefill_specs(cfg: Config) -> Dict[str, Any]:
+    m, t = cfg.model, cfg.train
+    out: Dict[str, Any] = {"qparams": param_specs(cfg)}
+    if m.is_encoder:
+        out["embeds"] = jax.ShapeDtypeStruct(
+            (t.global_batch, t.seq_len, m.d_model), jnp.float32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct(
+            (t.global_batch, t.seq_len), jnp.int32)
+    if m.cross_attn_every:
+        out["memory"] = jax.ShapeDtypeStruct(
+            (t.global_batch, m.num_image_tokens, m.d_model), jnp.float32)
+    return out
+
+
+def input_specs(cfg: Config) -> Tuple[Any, ...]:
+    """The (architecture × input-shape) cell's full input pytree, per kind."""
+    kind = shape_kind(cfg.shape)
+    if kind == "train":
+        return (state_specs(cfg), batch_specs(cfg))
+    if kind == "prefill":
+        return (prefill_specs(cfg),)
+    return (decode_specs(cfg),)   # decode / long-context decode
+
+
+def cell_is_runnable(cfg: Config) -> Tuple[bool, str]:
+    """Shape-applicability rules (DESIGN.md §4): returns (runnable, reason)."""
+    kind = shape_kind(cfg.shape)
+    m = cfg.model
+    if m.is_encoder and kind in ("decode",):
+        return False, "encoder-only: no decode step"
+    if cfg.shape == "long_500k" and not m.supports_long_context:
+        return False, "full quadratic attention at 500k ctx"
+    return True, ""

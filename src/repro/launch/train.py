@@ -1,0 +1,97 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tiny --steps 50
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b \
+        --shape train_4k --override quant.mode=simulate --dry-steps 3
+
+On a real TPU pod this process runs per host (jax.distributed.initialize is
+called when the coordinator env vars are present); in this container it runs
+single-process on CPU. Fault-tolerance wiring: checkpoint manager with
+atomic resume, preemption guard, step watchdog.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+from repro.config import load_config
+from repro.train import train_loop
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import PreemptionGuard, StepWatchdog
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--metrics-dir", default="",
+                    help="write JSONL step/switch telemetry here")
+    ap.add_argument("--override", action="append", default=[])
+    args = ap.parse_args(argv)
+
+    if "COORDINATOR_ADDRESS" in os.environ:   # multi-host entry
+        jax.distributed.initialize()
+
+    if args.smoke:
+        from repro.configs import get_smoke_config
+        from repro.config import apply_overrides, with_shape
+        cfg = get_smoke_config(args.arch)
+        if args.shape:
+            cfg = with_shape(cfg, args.shape)
+        cfg = apply_overrides(cfg, args.override)
+    else:
+        cfg = load_config(args.arch, args.shape, overrides=args.override)
+
+    state = None
+    mgr = None
+    if args.checkpoint_dir:
+        mgr = CheckpointManager(args.checkpoint_dir,
+                                keep=cfg.train.keep_checkpoints,
+                                async_save=cfg.train.async_checkpoint)
+        if args.resume and mgr.latest_step() is not None:
+            template = train_loop.init_state(cfg)
+            state = mgr.restore(template)
+            print(f"[train] resumed from step {int(state['step'])}")
+
+    watchdog = StepWatchdog(factor=cfg.train.straggler_factor,
+                            on_straggler=lambda s, dt, med: print(
+                                f"[watchdog] straggler step {s}: "
+                                f"{dt:.2f}s vs median {med:.2f}s"))
+
+    metrics_logger = None
+    if args.metrics_dir:
+        from repro.train.metrics import MetricsLogger
+        metrics_logger = MetricsLogger(args.metrics_dir,
+                                       run_name=args.arch.replace("/", "_"))
+
+    telemetry: list = []
+    with PreemptionGuard() as guard:
+        state, history = train_loop.train(
+            cfg, steps=args.steps, state=state, checkpoint_mgr=mgr,
+            watchdog=watchdog, telemetry=telemetry,
+            metrics_logger=metrics_logger)
+        if guard.requested and mgr is not None:
+            mgr.save(state, step=int(state["step"]))
+            mgr.wait()
+            print("[train] preemption checkpoint written")
+    if metrics_logger is not None:
+        metrics_logger.log_event("finished", steps=int(state["step"]))
+        metrics_logger.close()
+    if mgr is not None:
+        mgr.save(state, step=int(state["step"]))
+        mgr.wait()
+    if history:
+        print(f"[train] done: step={history[-1]['step']} "
+              f"loss={history[-1]['loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

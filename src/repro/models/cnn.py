@@ -1,0 +1,208 @@
+"""AlexNet (CIFAR variant) and ResNet20 — the paper's own evaluation models.
+
+Pure-functional param dicts; every conv kernel / FC matrix is its own path so
+the AdaPT controller assigns *per-layer* ⟨WL,FL⟩ exactly as in the paper
+(figs. 3/4 plot these trajectories). BatchNorm scale/shift and running stats
+are excluded from quantization (cfg.quant.exclude matches "norm").
+
+Width multiplier `width` scales channel counts so CPU tests/repro runs stay
+fast while the structure (depth, per-layer shapes' ratios) stays faithful.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import init as weight_init
+
+Array = jax.Array
+
+
+def conv(x: Array, w: Array, stride: int = 1, padding: str = "SAME") -> Array:
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def max_pool(x: Array, size: int = 2, stride: int = 2) -> Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, size, size, 1), (1, stride, stride, 1),
+        "VALID")
+
+
+def batch_norm(x: Array, p: Dict[str, Array], stats: Dict[str, Array],
+               train: bool, momentum: float = 0.9, eps: float = 1e-5
+               ) -> Tuple[Array, Dict[str, Array]]:
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new = {"mean": momentum * stats["mean"] + (1 - momentum) * mean,
+               "var": momentum * stats["var"] + (1 - momentum) * var}
+    else:
+        mean, var = stats["mean"], stats["var"]
+        new = stats
+    y = (x - mean) * jax.lax.rsqrt(var + eps) * p["norm_scale"] + p["norm_bias"]
+    return y, new
+
+
+def _conv_init(key, kh, kw, cin, cout, scale=1.0):
+    return weight_init.tnvs(key, (kh, kw, cin, cout), scale=scale, kind="conv")
+
+
+# ---------------------------------------------------------------------------
+# AlexNet (CIFAR)
+
+
+def init_alexnet(key: Array, num_classes: int = 10, width: float = 1.0
+                 ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    w = lambda c: max(int(c * width), 8)
+    ks = jax.random.split(key, 8)
+    params = {
+        "conv1": {"w": _conv_init(ks[0], 3, 3, 3, w(64))},
+        "conv2": {"w": _conv_init(ks[1], 3, 3, w(64), w(192))},
+        "conv3": {"w": _conv_init(ks[2], 3, 3, w(192), w(384))},
+        "conv4": {"w": _conv_init(ks[3], 3, 3, w(384), w(256))},
+        "conv5": {"w": _conv_init(ks[4], 3, 3, w(256), w(256))},
+        "fc1": {"w": weight_init.tnvs(ks[5], (w(256) * 16, w(1024))),
+                "b": jnp.zeros((w(1024),), jnp.float32)},
+        "fc2": {"w": weight_init.tnvs(ks[6], (w(1024), w(1024))),
+                "b": jnp.zeros((w(1024),), jnp.float32)},
+        "fc3": {"w": weight_init.tnvs(ks[7], (w(1024), num_classes)),
+                "b": jnp.zeros((num_classes,), jnp.float32)},
+    }
+    return params, {}
+
+
+def alexnet_forward(params, stats, x: Array, train: bool = True
+                    ) -> Tuple[Array, Dict]:
+    """x: (B, 32, 32, 3) → logits (B, classes)."""
+    h = jax.nn.relu(conv(x, params["conv1"]["w"]))
+    h = max_pool(h)                                   # 16x16
+    h = jax.nn.relu(conv(h, params["conv2"]["w"]))
+    h = max_pool(h)                                   # 8x8
+    h = jax.nn.relu(conv(h, params["conv3"]["w"]))
+    h = jax.nn.relu(conv(h, params["conv4"]["w"]))
+    h = jax.nn.relu(conv(h, params["conv5"]["w"]))
+    h = max_pool(h)                                   # 4x4
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+    h = jax.nn.relu(h @ params["fc2"]["w"] + params["fc2"]["b"])
+    return h @ params["fc3"]["w"] + params["fc3"]["b"], stats
+
+
+# ---------------------------------------------------------------------------
+# ResNet20 (CIFAR)
+
+
+def init_resnet20(key: Array, num_classes: int = 10, width: float = 1.0
+                  ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    w = lambda c: max(int(c * width), 4)
+    chans = [w(16), w(32), w(64)]
+    params: Dict[str, Any] = {}
+    stats: Dict[str, Any] = {}
+    keys = iter(jax.random.split(key, 64))
+
+    def bn(c):
+        return ({"norm_scale": jnp.ones((c,), jnp.float32),
+                 "norm_bias": jnp.zeros((c,), jnp.float32)},
+                {"mean": jnp.zeros((c,), jnp.float32),
+                 "var": jnp.ones((c,), jnp.float32)})
+
+    p, s = bn(chans[0])
+    params["stem"] = {"w": _conv_init(next(keys), 3, 3, 3, chans[0]), **p}
+    stats["stem"] = s
+    cin = chans[0]
+    for stage, cout in enumerate(chans):
+        for block in range(3):
+            name = f"s{stage}b{block}"
+            stride = 2 if (stage > 0 and block == 0) else 1
+            p1, s1 = bn(cout)
+            p2, s2 = bn(cout)
+            bp = {"conv1": {"w": _conv_init(next(keys), 3, 3, cin, cout), **p1},
+                  "conv2": {"w": _conv_init(next(keys), 3, 3, cout, cout), **p2}}
+            bs = {"conv1": s1, "conv2": s2}
+            if stride != 1 or cin != cout:
+                pd, sd = bn(cout)
+                bp["down"] = {"w": _conv_init(next(keys), 1, 1, cin, cout), **pd}
+                bs["down"] = sd
+            params[name] = bp
+            stats[name] = bs
+            cin = cout
+    params["fc"] = {"w": weight_init.tnvs(next(keys), (chans[2], num_classes)),
+                    "b": jnp.zeros((num_classes,), jnp.float32)}
+    return params, stats
+
+
+def _basic_block(bp, bs, x, stride, train):
+    h, n1 = batch_norm(conv(x, bp["conv1"]["w"], stride), bp["conv1"],
+                       bs["conv1"], train)
+    h = jax.nn.relu(h)
+    h, n2 = batch_norm(conv(h, bp["conv2"]["w"]), bp["conv2"], bs["conv2"], train)
+    new = {"conv1": n1, "conv2": n2}
+    if "down" in bp:
+        x, nd = batch_norm(conv(x, bp["down"]["w"], stride), bp["down"],
+                           bs["down"], train)
+        new["down"] = nd
+    return jax.nn.relu(x + h), new
+
+
+def resnet20_forward(params, stats, x: Array, train: bool = True
+                     ) -> Tuple[Array, Dict]:
+    """x: (B, 32, 32, 3) → logits (B, classes)."""
+    new_stats: Dict[str, Any] = {}
+    h, new_stats["stem"] = batch_norm(conv(x, params["stem"]["w"]),
+                                      params["stem"], stats["stem"], train)
+    h = jax.nn.relu(h)
+    for stage in range(3):
+        for block in range(3):
+            name = f"s{stage}b{block}"
+            stride = 2 if (stage > 0 and block == 0) else 1
+            h, new_stats[name] = _basic_block(params[name], stats[name], h,
+                                              stride, train)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ params["fc"]["w"] + params["fc"]["b"], new_stats
+
+
+MODELS = {
+    "alexnet": (init_alexnet, alexnet_forward),
+    "resnet20": (init_resnet20, resnet20_forward),
+}
+
+
+def ce_loss(logits: Array, labels: Array) -> Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def accuracy(logits: Array, labels: Array) -> Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def layer_madds(params, input_hw: int = 32) -> Dict[str, float]:
+    """Per-tensor MAdds for one forward pass (feeds the paper's perf model).
+
+    Convs: kh·kw·cin·cout·H_out·W_out; FC/linear: in·out. Spatial sizes track
+    the fixed CIFAR topology (pools/strides known from the forward fns).
+    """
+    out: Dict[str, float] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        keys = [str(getattr(k, "key", k)) for k in path]
+        if keys[-1] != "w" or leaf.ndim < 2:
+            continue
+        name = "/".join(keys)
+        if leaf.ndim == 4:
+            kh, kw, cin, cout = leaf.shape
+            # crude but faithful spatial bookkeeping: assume 32→16→8→4 halvings
+            # by position in the net (documented approximation of eq. 8 inputs)
+            hw = input_hw
+            if "conv2" in name or "s1" in name:
+                hw = input_hw // 2
+            if any(t in name for t in ("conv3", "conv4", "conv5", "s2")):
+                hw = input_hw // 4
+            out[name] = float(kh * kw * cin * cout * hw * hw)
+        else:
+            out[name] = float(leaf.shape[-2] * leaf.shape[-1])
+    return out

@@ -1,0 +1,84 @@
+"""Shared model building blocks (pure functions over param dicts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.core import fixed_point as fxp
+from repro.core import init as weight_init
+
+Array = jax.Array
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(logits: Array, cap: float) -> Array:
+    if cap <= 0.0:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def act_fn(x: Array, kind: str) -> Array:
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)
+
+
+def dense(x: Array, w: Array, *, out_logical: str | None = None) -> Array:
+    """x @ w with f32 accumulation; annotates the contraction output.
+
+    With the '#tp_reduce_bf16' rules flag, the dot's output dtype is bf16:
+    the MXU still accumulates in f32 internally, but row-parallel partial
+    sums cross the ICI in bf16 — half the TP all-reduce bytes for a ~2^-8
+    relative rounding on a 16-way sum (§Perf lever)."""
+    pref = (jnp.bfloat16 if sharding.flag("#tp_reduce_bf16")
+            and x.dtype == jnp.bfloat16 else jnp.float32)
+    y = jnp.dot(x, w.astype(x.dtype), preferred_element_type=pref)
+    y = y.astype(x.dtype)
+    if out_logical and x.ndim == 3:
+        y = sharding.shard(y, "batch", "seq", out_logical)
+    return y
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.exp(-jnp.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq       # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                             # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    if 2 * half < d:  # odd head dim: pass the tail through
+        rot = jnp.concatenate([rot, x[..., 2 * half:]], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def quantize_act(x: Array, wl: Array | None, enabled: bool) -> Array:
+    """Activation fixed-point quantization at the layer's word length
+    (dynamic-range FL, nearest rounding — see DESIGN.md §8)."""
+    if not enabled or wl is None:
+        return x
+    return fxp.quantize_activation(x, wl)
+
+
+def embed_lookup(table: Array, ids: Array, scale_by_dim: bool = False) -> Array:
+    out = jnp.take(table, ids, axis=0)
+    if scale_by_dim:
+        out = out * jnp.asarray(table.shape[-1] ** 0.5, out.dtype)
+    return sharding.shard(out, "batch", "seq", None)
+
+
+def init_dense(key: Array, shape, scale: float = 1.0) -> Array:
+    return weight_init.tnvs(key, shape, scale=scale, kind="linear")
+
+
+def init_embed(key: Array, vocab: int, d: int, scale: float = 1.0) -> Array:
+    return weight_init.tnvs(key, (vocab, d), scale=scale, kind="embed")

@@ -1,0 +1,39 @@
+"""Gated MLP (SwiGLU / GeGLU) block."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.config import ModelConfig
+from repro.models import common
+
+Array = jax.Array
+
+
+def init_layer(key: Array, cfg: ModelConfig, num_layers: int,
+               d_ff: int | None = None) -> Dict[str, Array]:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    L = (num_layers,) if num_layers > 0 else ()
+    return {
+        "wi_gate": common.init_dense(ks[0], L + (d, f)),
+        "wi_up": common.init_dense(ks[1], L + (d, f)),
+        "wo": common.init_dense(ks[2], L + (f, d)),
+        "pre_norm": jnp.zeros(L + (d,), jnp.float32),
+    }
+
+
+def apply(p: Dict[str, Array], x: Array, cfg: ModelConfig,
+          residual: bool = True) -> Array:
+    h = common.rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    gate = common.dense(h, p["wi_gate"], out_logical="ff")
+    up = common.dense(h, p["wi_up"], out_logical="ff")
+    out = common.dense(common.act_fn(gate, cfg.act_fn) * up, p["wo"])
+    out = sharding.shard(out, "batch", "seq", None)
+    if "post_norm" in p:
+        out = common.rms_norm(out, p["post_norm"], cfg.norm_eps)
+    return x + out if residual else out

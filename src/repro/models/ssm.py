@@ -1,0 +1,205 @@
+"""Mamba2 block via SSD (state-space duality, arXiv:2405.21060).
+
+TPU adaptation (DESIGN.md §3): the SSD *chunked* form is used — the sequence
+is split into chunks of length Q; within a chunk attention-like einsums hit
+the MXU, across chunks a tiny `lax.scan` carries the (H, P, N) state. This is
+the matmul-rich decomposition the paper derives; it maps onto TPU far better
+than the recurrent selective-scan kernel Mamba1 used on GPUs.
+
+Per DESIGN.md §4 the SSM *dynamics* parameters (a_log, dt_bias, D) and the
+recurrent state stay float32 / unquantized — they pass through exponentials;
+the big projection matrices (in_proj/out_proj/conv) are AdaPT-quantized.
+
+Decode runs the O(1) recurrent form against a persistent (conv, ssm) state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.config import ModelConfig
+from repro.models import common
+
+Array = jax.Array
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    """(d_inner, num_ssm_heads, head_dim, state)."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    hd = cfg.ssm_head_dim
+    return d_inner, d_inner // hd, hd, cfg.ssm_state
+
+
+def init_layer(key: Array, cfg: ModelConfig, num_layers: int) -> Dict[str, Array]:
+    d = cfg.d_model
+    di, nh, hd, n = dims(cfg)
+    kw = cfg.ssm_conv_width
+    ks = jax.random.split(key, 4)
+    L = (num_layers,) if num_layers > 0 else ()
+    # in_proj packs [z (di) | x (di) | B (n) | C (n) | dt (nh)]
+    return {
+        "in_proj": common.init_dense(ks[0], L + (d, 2 * di + 2 * n + nh)),
+        "conv_w": common.init_dense(ks[1], L + (kw, di + 2 * n)) * (kw ** 0.5),
+        "out_proj": common.init_dense(ks[2], L + (di, d)),
+        "a_log": jnp.zeros(L + (nh,), jnp.float32),          # A = -exp(a_log) = -1
+        "dt_bias": jnp.full(L + (nh,), -1.0, jnp.float32),   # softplus(-1) ≈ 0.31
+        "d_skip": jnp.ones(L + (nh,), jnp.float32),
+        "gate_norm": jnp.zeros(L + (di,), jnp.float32),
+        "pre_norm": jnp.zeros(L + (d,), jnp.float32),
+    }
+
+
+def causal_depthwise_conv(x: Array, w: Array) -> Array:
+    """x: (B, S, C), w: (K, C); causal, statically unrolled (K is 4)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    s = x.shape[1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i:i + s, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _split_proj(proj: Array, cfg: ModelConfig):
+    di, nh, hd, n = dims(cfg)
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def ssd_chunked(x: Array, dt: Array, a_log: Array, B: Array, C: Array,
+                d_skip: Array, chunk: int) -> Array:
+    """Chunked SSD. x: (b,s,h,p); dt: (b,s,h); a_log/d_skip: (h,);
+    B, C: (b,s,n) (single group shared across heads). Returns (b,s,h,p)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:  # zero-pad to a chunk multiple: dt=0 ⇒ pads are state no-ops
+        zp = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        y, h_final = ssd_chunked(zp(x), zp(dt), a_log, zp(B), zp(C),
+                                 d_skip, chunk)
+        return y[:, :s], h_final
+    nc = s // q
+    xf = x.astype(jnp.float32)
+    A = -jnp.exp(a_log.astype(jnp.float32))                   # (h,) negative
+    dA = dt * A                                               # (b,s,h)
+
+    xc = xf.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    dAc = dA.reshape(b, nc, q, h)
+    Bc = B.astype(jnp.float32).reshape(b, nc, q, n)
+    Cc = C.astype(jnp.float32).reshape(b, nc, q, n)
+
+    seg = jnp.cumsum(dAc, axis=2)                             # (b,nc,q,h)
+
+    # --- intra-chunk (quadratic in q; the MXU-friendly part) ---
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]       # (b,nc,i,j,h)
+    causal = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(rel), 0.0)                  # decay matrix
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)            # (b,nc,i,j)
+    y_diag = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp",
+                        scores, L, dtc, xc)
+
+    # --- chunk boundary states ---
+    last = seg[:, :, -1:, :]                                  # (b,nc,1,h)
+    sdec = jnp.exp(last - seg)                                # (b,nc,q,h)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, sdec * dtc, xc)
+    cdec = jnp.exp(jnp.sum(dAc, axis=2))                      # (b,nc,h)
+
+    # --- inter-chunk recurrence (tiny scan over nc) ---
+    def step(hprev, inp):
+        st, dec = inp
+        return hprev * dec[:, :, None, None] + st, hprev
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(states, 1, 0), jnp.moveaxis(cdec, 1, 0))
+    h_final, h_in = jax.lax.scan(step, h0, xs)                # (nc,b,h,p,n)
+    h_in = jnp.moveaxis(h_in, 0, 1)                           # (b,nc,h,p,n)
+
+    # --- off-diagonal: y_i += exp(seg_i) C_i · H_in ---
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc, h_in, jnp.exp(seg))
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    y = y + xf * d_skip.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), h_final
+
+
+def apply(p: Dict[str, Array], x: Array, cfg: ModelConfig,
+          return_state: bool = False):
+    """Full-sequence mamba2 block with residual. x: (B, S, D).
+
+    ``return_state=True`` additionally returns the decode cache as of the
+    last position (prefill → decode handoff)."""
+    di, nh, hd, n = dims(cfg)
+    h = common.rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    proj = common.dense(h, p["in_proj"])
+    z, xbc_raw, dtraw = _split_proj(proj, cfg)
+    xbc = causal_depthwise_conv(xbc_raw, p["conv_w"])
+    xbc = jax.nn.silu(xbc)
+    xin = xbc[..., :di]
+    B = xbc[..., di:di + n]
+    C = xbc[..., di + n:]
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    bsz, s, _ = x.shape
+    y, h_final = ssd_chunked(xin.reshape(bsz, s, nh, hd), dt, p["a_log"],
+                             B, C, p["d_skip"], cfg.ssm_chunk)
+    y = y.reshape(bsz, s, di)
+    y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        p["gate_norm"], cfg.norm_eps)
+    y = sharding.shard(y, "batch", "seq", "ff")
+    out = common.dense(y, p["out_proj"])
+    out = sharding.shard(out, "batch", "seq", None)
+    if return_state:
+        kw = p["conv_w"].shape[-2]
+        cache = {"conv": xbc_raw[:, s - (kw - 1):, :], "ssm": h_final}
+        return x + out, cache
+    return x + out
+
+
+def init_cache(cfg: ModelConfig, batch: int, num_layers: int, dtype=jnp.float32):
+    """Decode-time state: rolling conv inputs + recurrent SSM state."""
+    di, nh, hd, n = dims(cfg)
+    kw = cfg.ssm_conv_width
+    L = (num_layers,) if num_layers > 0 else ()
+    return {
+        "conv": jnp.zeros(L + (batch, kw - 1, di + 2 * n), dtype),
+        "ssm": jnp.zeros(L + (batch, nh, hd, n), jnp.float32),
+    }
+
+
+def apply_decode(p: Dict[str, Array], x: Array, cfg: ModelConfig,
+                 cache: Dict[str, Array]) -> Tuple[Array, Dict[str, Array]]:
+    """One-token recurrent step. x: (B, 1, D)."""
+    di, nh, hd, n = dims(cfg)
+    h = common.rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    proj = common.dense(h, p["in_proj"])
+    z, xbc, dtraw = _split_proj(proj, cfg)
+
+    conv_in = jnp.concatenate([cache["conv"], xbc], axis=1)   # (B, K, C)
+    w = p["conv_w"].astype(jnp.float32)                       # (K, C)
+    xbc1 = jnp.sum(conv_in.astype(jnp.float32) * w[None], axis=1, keepdims=True)
+    xbc1 = jax.nn.silu(xbc1).astype(x.dtype)
+    new_conv = conv_in[:, 1:, :]
+
+    xin = xbc1[..., :di].reshape(-1, nh, hd)                  # (B,H,P)
+    B_ = xbc1[:, 0, di:di + n]                                # (B,N)
+    C_ = xbc1[:, 0, di + n:]
+    dt = jax.nn.softplus(dtraw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * A)                                     # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, B_.astype(jnp.float32),
+                     xin.astype(jnp.float32))
+    ssm = cache["ssm"] * dec[:, :, None, None] + upd          # (B,H,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", ssm, C_.astype(jnp.float32))
+    y = y + xin.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(-1, 1, di).astype(x.dtype)
+    y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        p["gate_norm"], cfg.norm_eps)
+    out = common.dense(y, p["out_proj"])
+    return x + out, {"conv": new_conv, "ssm": ssm}

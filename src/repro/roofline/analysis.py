@@ -1,0 +1,135 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute   = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory    = HLO_bytes / (chips × HBM_bw)
+    collective= collective_bytes / (chips × link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are NOT
+in cost_analysis, so we parse the (partitioned) HLO text and sum operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.
+
+Hardware constants (TPU v5e, per task spec):
+    197 TFLOP/s bf16 per chip · 819 GB/s HBM · ~50 GB/s/link ICI.
+
+MODEL_FLOPS (6·N·D dense, 6·N_active·D MoE) anchors a usefulness ratio —
+how much of the compiled compute is the model itself vs remat/overhead.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+PEAK_FLOPS_INT8 = 394e12     # int8 MXU path (2× bf16) — native_int8 mode
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+# `%x = f32[8,128]{1,0} all-reduce(...)` — possibly tuple-shaped
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}\s/#_\.]*?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes per collective kind over the HLO module.
+
+    The partitioned module is per-device, so these are bytes *per chip* per
+    step — exactly the numerator the collective roofline term wants.
+    """
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_text, kind = m.group(1), m.group(2).lower()
+        out[kind] = out.get(kind, 0.0) + _shape_bytes(shape_text)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def roofline_terms(record: Dict, *, chips: Optional[int] = None,
+                   peak_flops: float = PEAK_FLOPS) -> Dict[str, float]:
+    """Derive the three terms (seconds) from a dry-run record.
+
+    cost_analysis on the partitioned program reports per-device numbers, so
+    each term divides by per-chip capability only.
+    """
+    cost = record.get("cost", {})
+    coll = record.get("collectives", {})
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    coll_bytes = float(coll.get("total", 0.0))
+    terms = {
+        "compute_s": flops / peak_flops,
+        "memory_s": bytes_acc / HBM_BW,
+        "collective_s": coll_bytes / ICI_BW,
+    }
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k])
+    terms["step_s_lower_bound"] = max(
+        terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    return terms
+
+
+def model_flops(cfg, *, per_chip: bool = True, chips: int = 256) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) per optimizer step, forward+backward.
+
+    N excludes embedding lookups (standard convention); MoE counts only the
+    activated experts (top-k of E)."""
+    m, t = cfg.model, cfg.train
+    from repro.models import transformer
+    import jax
+    shapes = jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), m))
+    total = 0
+    active = 0
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if "embed" in p or "head" in p:
+            continue
+        total += n
+        if "we_" in p and m.num_experts:
+            active += n * m.experts_per_token / m.num_experts
+        else:
+            active += n
+    tokens = t.global_batch * max(t.seq_len, 1)
+    f = 6.0 * active * tokens
+    return f / chips if per_chip else f
+
+
+def usefulness(record: Dict, cfg, chips: int = 256) -> float:
+    """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+    hlo = float(record.get("cost", {}).get("flops", 0.0))
+    if hlo <= 0:
+        return 0.0
+    return model_flops(cfg, per_chip=True, chips=chips) / hlo
+
+
+def format_row(record: Dict, terms: Dict[str, float]) -> str:
+    c = record.get("collectives", {})
+    return (f"| {record['arch']} | {record['shape']} | "
+            f"{terms['compute_s'] * 1e3:.2f} | {terms['memory_s'] * 1e3:.2f} | "
+            f"{terms['collective_s'] * 1e3:.2f} | {terms['bottleneck'].replace('_s', '')} | "
+            f"{c.get('total', 0) / 1e9:.2f} GB |")

@@ -1,0 +1,153 @@
+"""Checkpointing: atomic, optionally async, elastically resumable.
+
+Format: one ``step_<N>/`` directory holding
+  * ``arrays.npz``  — flat {path: ndarray} of every leaf in the state pytree
+  * ``meta.msgpack``— step, config summary, mesh shape, CRC32 of arrays.npz,
+                      treedef repr (for integrity checks)
+  * ``DONE``        — commit marker written LAST (rename-based atomicity:
+                      a crash mid-write leaves no DONE, restore skips it)
+
+Elastic resume: arrays are restored host-side; the caller re-shards onto
+whatever mesh the restoring process has (device count may differ from the
+saving run — ZeRO/TP shardings are re-derived from the config, not stored).
+"""
+from __future__ import annotations
+
+import io
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+_SEP = "::"
+
+
+def flatten_state(state: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            flat[key + "@bf16"] = arr.astype(np.float32)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def unflatten_into(template: PyTree, flat: Dict[str, np.ndarray]) -> PyTree:
+    """Rebuild a state pytree with ``template``'s structure from flat arrays.
+    Template leaves provide dtype/sharding targets (elastic resume)."""
+    def visit(path, leaf):
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if key in flat:
+            arr = flat[key]
+        elif key + "@bf16" in flat:
+            arr = flat[key + "@bf16"].astype(jnp.bfloat16)
+        else:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = jnp.asarray(arr, dtype=leaf.dtype)
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"state shape {leaf.shape}")
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None and hasattr(sharding, "mesh"):
+            arr = jax.device_put(arr, sharding)   # re-shard onto current mesh
+        return arr
+    return jax.tree_util.tree_map_with_path(visit, template)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, state: PyTree, step: int, extra: Optional[dict] = None):
+        flat = flatten_state(state)   # device_get on the caller's thread
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(flat, step, extra or {}), daemon=True)
+            self._thread.start()
+        else:
+            self._write(flat, step, extra or {})
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, flat: Dict[str, np.ndarray], step: int, extra: dict):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        buf = io.BytesIO()
+        np.savez(buf, **flat)
+        data = buf.getvalue()
+        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+            f.write(data)
+        meta = {"step": step, "crc32": zlib.crc32(data),
+                "num_arrays": len(flat),
+                "device_count": jax.device_count(), **extra}
+        with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
+            f.write(msgpack.packb(meta))
+        with open(os.path.join(tmp, "DONE"), "w") as f:
+            f.write("ok")
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            if name.startswith("step_") and not name.endswith(".tmp") and \
+                    os.path.exists(os.path.join(self.dir, name, "DONE")):
+                out.append(int(name.split("_")[1]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: PyTree, step: Optional[int] = None) -> PyTree:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "arrays.npz"), "rb") as f:
+            data = f.read()
+        with open(os.path.join(d, "meta.msgpack"), "rb") as f:
+            meta = msgpack.unpackb(f.read())
+        if zlib.crc32(data) != meta["crc32"]:
+            raise IOError(f"checkpoint step {step} failed CRC — torn write?")
+        arrays = dict(np.load(io.BytesIO(data)))
+        return unflatten_into(template, arrays)
+
+    def restore_meta(self, step: Optional[int] = None) -> dict:
+        step = step if step is not None else self.latest_step()
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "meta.msgpack"), "rb") as f:
+            return msgpack.unpackb(f.read())

@@ -1,0 +1,324 @@
+"""AdaPT-SGD training loop (paper alg. 1), unified over all model families.
+
+Hot path = ``train_step`` (jit):
+    1. L̂ = Quantize(L, Q)           — master→quantized copy at current ⟨WL,FL⟩
+    2. Ĝ, L = ForwardPass(L̂, batch) — loss incl. elastic-net + P penalty,
+                                       grads taken AT the quantized weights
+                                       (straight-through to the master copy)
+    3. controller.accumulate         — windowed gradient-diversity stats
+    4. SGDBackwardsPass(L, Ĝ)        — grad-normalize → ROP → optimizer on L
+
+Cold path = ``precision_switch`` (jit, every `adapt_interval` steps):
+    PushDown + PushUp + strategy/lookback/resolution adaptation (alg. 2).
+
+The step never branches on ⟨WL,FL⟩ values — they are traced int32 arrays —
+so precision switches never recompile (DESIGN.md §5.2).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import Config
+from repro.core import controller, sparsity
+from repro.core import fixed_point as fxp
+from repro.data import synthetic
+from repro.models import cnn, transformer
+from repro.quant import qsgd
+from repro.train import optimizer as opt_lib
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# State
+
+
+def init_state(cfg: Config, key: Optional[Array] = None) -> Dict[str, Any]:
+    key = key if key is not None else jax.random.PRNGKey(cfg.train.seed)
+    m = cfg.model
+    if m.family == "cnn":
+        init_fn, _ = cnn.MODELS[m.name.replace("-smoke", "")]
+        width = 0.25 if m.name.endswith("smoke") else 1.0
+        params, stats = init_fn(key, num_classes=m.vocab_size, width=width)
+    else:
+        params = transformer.init_params(key, m)
+        stats = {}
+    adapt = (controller.init_adapt_state(params, cfg.quant)
+             if cfg.quant.mode != "off" else {"tensors": {}})
+    return {
+        "params": params,
+        "stats": stats,
+        "opt": opt_lib.init_opt_state(params, cfg.optimizer),
+        "adapt": adapt,
+        "step": jnp.int32(0),
+        "rng": key,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Family-specific loss
+
+
+def _task_loss(cfg: Config, qparams, stats, batch, act_wl=None,
+               train: bool = True):
+    """Returns (task_loss, aux dict). aux may carry new stats / accuracy."""
+    m = cfg.model
+    if m.family == "cnn":
+        _, fwd = cnn.MODELS[m.name.replace("-smoke", "")]
+        logits, new_stats = fwd(qparams, stats, batch["images"], train)
+        loss = cnn.ce_loss(logits, batch["labels"])
+        return loss, {"stats": new_stats,
+                      "acc": cnn.accuracy(logits, batch["labels"])}
+    kwargs = {}
+    if m.is_encoder:
+        kwargs["embeds"] = batch["embeds"]
+        targets, shift = batch["labels"], False
+    else:
+        kwargs["tokens"] = batch["tokens"]
+        targets, shift = batch["tokens"], True
+    if m.cross_attn_every:
+        kwargs["memory"] = batch["memory"]
+    logits = transformer.forward(qparams, m, act_wl=act_wl,
+                                 use_pallas=cfg.quant.use_pallas,
+                                 remat=cfg.train.remat, **kwargs)
+    return transformer.lm_loss(logits, targets, shift=shift), {"stats": stats}
+
+
+# ---------------------------------------------------------------------------
+# Train step
+
+
+def make_train_step(cfg: Config, qparam_shardings=None) -> Callable:
+    """``qparam_shardings``: optional NamedSharding tree for the quantized
+    copy. Without it GSPMD may resolve the (sharded master × replicated SR
+    noise) elementwise quantize to a REPLICATED output — i.e. all-gather the
+    f32 master instead of the small quantized container (measured on
+    granite-8b: the 96 GiB/step gather didn't shrink under a bf16 container
+    until this constraint pinned it; EXPERIMENTS.md §Perf)."""
+    qcfg, ocfg, tcfg = cfg.quant, cfg.optimizer, cfg.train
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, Array]
+                   ) -> Tuple[Dict[str, Any], Dict[str, Array]]:
+        step_key = jax.random.fold_in(state["rng"], state["step"])
+        params = state["params"]
+        adapt = state["adapt"]
+
+        act_wl = None
+        packed = False
+        if qcfg.mode != "off":
+            qkey = step_key if qcfg.stochastic_rounding else None
+            if qcfg.container_dtype == "int8_packed" and \
+                    cfg.model.family != "cnn":
+                # native-int8 wire format: weights cross the mesh as int8,
+                # dequantized inside the scan body after the per-layer
+                # gather (§Perf / DESIGN §3)
+                packed = True
+                qparams = controller.quantize_params_packed(
+                    params, adapt, qcfg, qkey, shardings=qparam_shardings)
+            else:
+                container = {"bfloat16": jnp.bfloat16,
+                             "int8": jnp.int8}.get(qcfg.container_dtype,
+                                                   jnp.float32)
+                qparams = controller.quantize_params(
+                    params, adapt, qcfg, qkey, dtype=container,
+                    shardings=qparam_shardings)
+                if qparam_shardings is not None:
+                    qparams = jax.lax.with_sharding_constraint(
+                        qparams, qparam_shardings)
+            if cfg.model.family != "cnn" and qcfg.quantize_activations:
+                act_wl = transformer.act_wl_from_state(adapt)
+        else:
+            qparams = params
+
+        def loss_fn(qp, mb):
+            task, aux = _task_loss(cfg, qp, state["stats"], mb, act_wl)
+            if qcfg.mode != "off":
+                # reg terms on an eagerly-unpacked view: elementwise +
+                # scalar reductions only, so it stays fully sharded (no
+                # gathers); its cotangents add onto the same wrefs.
+                reg_tree = fxp.unpack_tree(qp) if packed else qp
+                full = sparsity.adapt_loss(
+                    task, reg_tree, adapt, alpha=ocfg.l1, beta=ocfg.l2,
+                    penalty_coef=ocfg.penalty_coef, max_wl=qcfg.max_wl)
+            else:
+                full = task
+            return full, (task, aux)
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True,
+                                     allow_int=packed)
+        strip = controller.strip_packed_grads if packed else (lambda g: g)
+
+        def compute_grads(qp, b):
+            if tcfg.accum_steps > 1:
+                # microbatch scan: live activations shrink by accum_steps
+                # while the global batch (AdaPT's per-batch semantics) stays.
+                mb_batch = _microbatch(b, tcfg.accum_steps)
+
+                def accum_body(carry, mb):
+                    g_acc, l_acc, t_acc = carry
+                    (loss, (task, aux)), g = grad_fn(qp, mb)
+                    g_acc = jax.tree.map(
+                        lambda a, x: a + x.astype(a.dtype), g_acc, strip(g))
+                    return (g_acc, l_acc + loss, t_acc + task), aux
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, _accum_dtype(tcfg)), params)
+                (g, loss, task), auxes = jax.lax.scan(
+                    accum_body, (g0, jnp.float32(0.0), jnp.float32(0.0)),
+                    mb_batch)
+                inv = 1.0 / tcfg.accum_steps
+                g = jax.tree.map(lambda x: (x * inv).astype(jnp.float32), g)
+                return loss * inv, task * inv, \
+                    jax.tree.map(lambda a: a[-1], auxes), g
+            (loss, (task, aux)), g = grad_fn(qp, b)
+            return loss, task, aux, strip(g)
+
+        if tcfg.qsgd_pod_compression:
+            # grads stay pod-local inside a shard_map manual over "pod"
+            # (auto over data/model); the cross-pod reduce ships int8 (QSGD)
+            # — 4× less traffic on the slowest links (quant/qsgd.py).
+            from repro import sharding as shd
+            from jax.sharding import PartitionSpec as P
+            mesh = shd.current_mesh()
+            rules = shd.strip_axes(
+                dict(shd._RULES.get()[1]), ("pod",))
+
+            def pod_local(qp, b):
+                with shd.use_rules(mesh, rules):
+                    loss, task, aux, g = compute_grads(qp, b)
+                g = qsgd.psum_compressed(g, step_key, "pod", tcfg.qsgd_bits)
+                npods = jax.lax.psum(1, "pod")
+                g = jax.tree.map(lambda x: x / npods, g)
+                return (jax.lax.pmean(loss, "pod"),
+                        jax.lax.pmean(task, "pod"), aux, g)
+
+            loss, task, aux, grads = jax.shard_map(
+                pod_local, mesh=mesh, axis_names={"pod"},
+                in_specs=(P(), P("pod")), out_specs=P(),
+                check_vma=False)(qparams, batch)
+        else:
+            loss, task, aux, grads = compute_grads(qparams, batch)
+
+        if qcfg.mode != "off":
+            adapt = controller.accumulate(adapt, grads, task)
+            grads = opt_lib.normalize_grads(grads, set(adapt["tensors"]))
+        grads = opt_lib.clip_by_global_norm(grads, ocfg.grad_clip)
+
+        opt = opt_lib.rop_update(state["opt"], task, ocfg)
+        params, opt = opt_lib.apply_updates(params, grads, opt, ocfg)
+
+        metrics = {"loss": task, "full_loss": loss, "lr": opt["lr"],
+                   "grad_norm": _global_norm(grads)}
+        if "acc" in aux:
+            metrics["acc"] = aux["acc"]
+        new_state = {
+            "params": params,
+            "stats": aux.get("stats", state["stats"]),
+            "opt": opt,
+            "adapt": adapt,
+            "step": state["step"] + 1,
+            "rng": state["rng"],
+        }
+        return new_state, metrics
+
+    return train_step
+
+
+def _microbatch(batch: Dict[str, Array], accum: int) -> Dict[str, Array]:
+    """(B, ...) → (accum, B/accum, ...), microbatch dim sharded like batch."""
+    from repro import sharding
+
+    def visit(a):
+        mb = a.reshape((accum, a.shape[0] // accum) + a.shape[1:])
+        return sharding.shard(mb, None, "batch", *([None] * (a.ndim - 1)))
+
+    return jax.tree.map(visit, batch)
+
+
+def _accum_dtype(tcfg):
+    return jnp.bfloat16 if tcfg.accum_dtype == "bfloat16" else jnp.float32
+
+
+def _global_norm(grads) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(grads)))
+
+
+def make_precision_switch(cfg: Config) -> Callable:
+    qcfg = cfg.quant
+
+    def precision_switch(state: Dict[str, Any]) -> Dict[str, Any]:
+        adapt = controller.precision_switch(state["adapt"], state["params"],
+                                            qcfg)
+        return dict(state, adapt=adapt)
+
+    return precision_switch
+
+
+# ---------------------------------------------------------------------------
+# Data dispatch
+
+
+def make_batch(cfg: Config, step: int) -> Dict[str, Array]:
+    if cfg.model.family == "cnn":
+        return synthetic.cifar_batch(cfg.model.vocab_size,
+                                     cfg.train.global_batch, step,
+                                     cfg.train.seed)
+    return synthetic.lm_batch(cfg, step)
+
+
+# ---------------------------------------------------------------------------
+# Host-side driver (single-process; the launcher adds mesh/shardings)
+
+
+def train(cfg: Config, *, steps: Optional[int] = None,
+          state: Optional[Dict[str, Any]] = None,
+          checkpoint_mgr=None, watchdog=None,
+          log: Callable[[str], None] = print,
+          telemetry: Optional[list] = None,
+          metrics_logger=None) -> Tuple[Dict[str, Any], list]:
+    """Run the loop; returns (state, history). ``telemetry`` (if a list)
+    collects per-switch controller snapshots for the paper's perf model;
+    ``metrics_logger`` (train.metrics.MetricsLogger) streams JSONL."""
+    steps = steps if steps is not None else cfg.train.steps
+    if state is None:
+        state = init_state(cfg)
+    step_fn = jax.jit(make_train_step(cfg), donate_argnums=0)
+    switch_fn = (jax.jit(make_precision_switch(cfg), donate_argnums=0)
+                 if cfg.quant.mode != "off" else None)
+    interval = cfg.train.adapt_interval or cfg.quant.lb_lwr
+
+    history = []
+    start_step = int(state["step"])
+    for i in range(start_step, start_step + steps):
+        t0 = time.perf_counter()
+        batch = make_batch(cfg, i)
+        state, metrics = step_fn(state, batch)
+        if switch_fn is not None and (i + 1) % interval == 0:
+            state = switch_fn(state)
+            if telemetry is not None or metrics_logger is not None:
+                snap = controller.snapshot(state["adapt"])
+                if telemetry is not None:
+                    telemetry.append(snap)
+                if metrics_logger is not None:
+                    metrics_logger.log_switch(i + 1, snap)
+        dt = time.perf_counter() - t0
+        if watchdog is not None:
+            watchdog.observe(i, dt)
+        if (i + 1) % max(cfg.train.log_every, 1) == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i + 1, **m, "dt": dt})
+            if metrics_logger is not None:
+                metrics_logger.log_step(i + 1, m, dt=dt)
+            log(f"step {i + 1:5d} loss={m['loss']:.4f} lr={m['lr']:.4g} "
+                + (f"acc={m['acc']:.3f} " if "acc" in m else "")
+                + f"({dt * 1e3:.0f} ms)")
+        if checkpoint_mgr is not None and cfg.train.checkpoint_every and \
+                (i + 1) % cfg.train.checkpoint_every == 0:
+            checkpoint_mgr.save(state, step=i + 1)
+    return state, history

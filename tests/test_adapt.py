@@ -1,0 +1,214 @@
+"""AdaPT algorithm invariants — parametrized property sweeps (the container
+has no `hypothesis`, so properties run over seeded input grids)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import QuantConfig
+from repro.core import controller, fixed_point as fxp, pushdown, pushup
+
+SEEDS = [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# fixed-point quantizer properties
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("wl,fl", [(8, 4), (4, 2), (16, 12), (2, 0), (12, 8)])
+def test_quantize_on_grid_and_bounded(seed, wl, fl):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (512,)) * 3.0
+    q = fxp.quantize(w, wl, fl)
+    scaled = np.asarray(q) * 2.0 ** fl
+    assert np.allclose(scaled, np.round(scaled), atol=1e-4), "not on grid"
+    qmin, qmax = -(2 ** (wl - 1)), 2 ** (wl - 1) - 1
+    assert scaled.min() >= qmin - 1e-4 and scaled.max() <= qmax + 1e-4
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_quantize_idempotent(seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+    q1 = fxp.quantize(w, 8, 4)
+    q2 = fxp.quantize(q1, 8, 4)
+    assert float(jnp.max(jnp.abs(q1 - q2))) == 0.0
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_stochastic_rounding_unbiased(seed):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (64,))
+    reps = 512
+    qs = []
+    for i in range(reps):
+        u = jax.random.uniform(jax.random.fold_in(key, i), w.shape)
+        qs.append(fxp.quantize(w, 8, 4, u=u))
+    bias = jnp.abs(jnp.mean(jnp.stack(qs), 0) - jnp.clip(
+        w, -(2.0 ** 3), 2.0 ** 3 - 2.0 ** -4))
+    # SR is unbiased on the representable range; grid step is 2^-4
+    assert float(jnp.max(bias)) < 3 * (2.0 ** -4) / np.sqrt(reps) * 4
+
+
+def test_wider_word_never_further():
+    """Monotone refinement: quantization error shrinks (weakly) with WL at
+    fixed representable range."""
+    w = jax.random.normal(jax.random.PRNGKey(7), (2048,))
+    amax = jnp.max(jnp.abs(w))
+    errs = []
+    for wl in (4, 6, 8, 12, 16, 20):
+        fl = fxp.fl_for_wl(amax, wl)
+        errs.append(float(jnp.mean(jnp.abs(fxp.quantize(w, wl, fl) - w))))
+    assert all(a >= b - 1e-9 for a, b in zip(errs, errs[1:])), errs
+
+
+# ---------------------------------------------------------------------------
+# PushDown (KL) properties
+
+
+def test_kl_zero_for_identical():
+    w = jax.random.normal(jax.random.PRNGKey(0), (4096,))
+    h = pushdown._histogram(w, jnp.min(w), jnp.max(w), jnp.int32(100), 150)
+    assert float(pushdown.kl_bits(h, h)) < 1e-6
+
+
+def test_pushdown_finds_exact_representation():
+    """Weights already on a coarse grid ⇒ PushDown returns a small WL."""
+    key = jax.random.PRNGKey(1)
+    w = fxp.quantize(jax.random.normal(key, (8192,)), 5, 3)
+    wl, fl = pushdown.push_down(w, jnp.int32(100), r_upr=150, eps_kl=1e-2)
+    assert int(wl) <= 8, f"grid-aligned tensor got WL={int(wl)}"
+
+
+def test_pushdown_wide_for_heavy_tailed():
+    """A distribution with fine structure needs more bits than a coarse one."""
+    key = jax.random.PRNGKey(2)
+    fine = jax.random.normal(key, (8192,)) * jnp.exp(
+        jax.random.normal(jax.random.fold_in(key, 1), (8192,)))
+    coarse = fxp.quantize(jax.random.normal(key, (8192,)), 4, 2)
+    wl_fine, _ = pushdown.push_down(fine, jnp.int32(150), r_upr=150,
+                                    eps_kl=1e-2)
+    wl_coarse, _ = pushdown.push_down(coarse, jnp.int32(150), r_upr=150,
+                                      eps_kl=1e-2)
+    assert int(wl_fine) >= int(wl_coarse)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_pushdown_subsample_stable(seed):
+    """The strided-subsample estimate stays within ±4 bits of full-tensor."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (1 << 16,))
+    wl_full, _ = pushdown.push_down(w, jnp.int32(100), r_upr=150, eps_kl=1e-2)
+    sub = pushdown.subsample(w, 4096)
+    wl_sub, _ = pushdown.push_down(sub, jnp.int32(100), r_upr=150,
+                                   eps_kl=1e-2)
+    assert abs(int(wl_full) - int(wl_sub)) <= 4
+
+
+# ---------------------------------------------------------------------------
+# PushUp properties
+
+
+@pytest.mark.parametrize("ds", [1.0, 1.5, 2.0, 5.0, 50.0])
+@pytest.mark.parametrize("st", [0, 1, 2])
+def test_pushup_bounds(ds, st):
+    wl, fl = pushup.push_up(jnp.int32(6), jnp.int32(3), jnp.float32(ds),
+                            jnp.int32(st), buff=4, max_wl=32)
+    assert 2 <= int(wl) <= 32
+    assert 0 <= int(fl) < int(wl)
+
+
+def test_pushup_strategy_ordering():
+    """min ≤ mean ≤ max suggestion at the same diversity."""
+    ds = jnp.float32(8.0)
+    outs = [int(pushup.push_up(jnp.int32(6), jnp.int32(3), ds, jnp.int32(s),
+                               buff=4)[1]) for s in (0, 1, 2)]
+    assert outs[0] <= outs[1] <= outs[2], outs
+
+
+def test_gradient_diversity_lower_bound():
+    """Δs ≥ 1 (triangle inequality) on random windows."""
+    key = jax.random.PRNGKey(0)
+    for i in range(8):
+        g = jax.random.normal(jax.random.fold_in(key, i), (16, 64))
+        norm_sum = jnp.sum(jnp.linalg.norm(g, axis=1))
+        sum_norm = jnp.linalg.norm(jnp.sum(g, axis=0))
+        assert float(pushup.gradient_diversity(norm_sum, sum_norm)) >= 1 - 1e-5
+
+
+def test_adapt_strategy_transitions():
+    # improving loss → min; stagnating → escalate
+    assert int(pushup.adapt_strategy(jnp.int32(1), jnp.float32(2.0),
+                                     jnp.float32(1.0))) == pushup.ST_MIN
+    assert int(pushup.adapt_strategy(jnp.int32(0), jnp.float32(1.0),
+                                     jnp.float32(2.0))) == 1
+    assert int(pushup.adapt_strategy(jnp.int32(2), jnp.float32(1.0),
+                                     jnp.float32(2.0))) == pushup.ST_MAX
+
+
+def test_lookback_and_resolution_bounds():
+    q = QuantConfig()
+    for ds in (0.5, 1.0, 3.0, 1e6, float("inf")):
+        lb = pushup.adapt_lookback(jnp.int32(50), jnp.float32(ds),
+                                   lb_lwr=q.lb_lwr, lb_upr=q.lb_upr,
+                                   gamma=q.gamma)
+        assert q.lb_lwr <= int(lb) <= q.lb_upr
+        r = pushup.adapt_resolution(jnp.int32(100), lb, lb_lwr=q.lb_lwr,
+                                    lb_upr=q.lb_upr, r_lwr=q.r_lwr,
+                                    r_upr=q.r_upr)
+        assert q.r_lwr <= int(r) <= q.r_upr
+
+
+# ---------------------------------------------------------------------------
+# controller integration
+
+
+def _tiny_params(key):
+    return {"blocks": {"mlp": {"w": jax.random.normal(key, (2, 16, 16))}},
+            "head": jax.random.normal(jax.random.fold_in(key, 1), (16, 32))}
+
+
+def test_controller_window_and_switch():
+    qcfg = dataclasses.replace(QuantConfig(), lb_lwr=3, lb_upr=5)
+    params = _tiny_params(jax.random.PRNGKey(0))
+    st = controller.init_adapt_state(params, qcfg)
+    assert set(st["tensors"]) == {"blocks/mlp/w", "head"}
+    assert st["tensors"]["blocks/mlp/w"]["wl"].shape == (2,)   # per layer
+    g = jax.tree.map(lambda p: jnp.ones_like(p) * 0.1, params)
+    for i in range(3):
+        st = controller.accumulate(st, g, jnp.float32(1.0 - i * 0.1))
+    assert int(st["tensors"]["head"]["count"]) == 3
+    st2 = controller.precision_switch(st, params, qcfg)
+    # window full (count >= lb_lwr=3): counters reset, precision updated
+    assert int(st2["tensors"]["head"]["count"]) == 0
+    wl = st2["tensors"]["head"]["wl"]
+    assert 2 <= int(wl) <= 32
+
+
+def test_quantize_params_respects_exclusions():
+    qcfg = QuantConfig()
+    params = {"blocks": {"attn": {"wq": jnp.ones((2, 8, 8)),
+                                  "pre_norm": jnp.ones((2, 8))},
+                         "moe": {"router": jnp.ones((2, 8, 4))}}}
+    st = controller.init_adapt_state(params, qcfg)
+    assert "blocks/attn/wq" in st["tensors"]
+    assert "blocks/attn/pre_norm" not in st["tensors"]   # ndim < 2 rule + name
+    assert "blocks/moe/router" not in st["tensors"]      # excluded by name
+    q = controller.quantize_params(params, st, qcfg,
+                                   key=jax.random.PRNGKey(0))
+    # router passes through exactly
+    assert float(jnp.max(jnp.abs(q["blocks"]["moe"]["router"] - 1.0))) == 0.0
+
+
+def test_precision_switch_is_jittable_and_stable():
+    qcfg = dataclasses.replace(QuantConfig(), lb_lwr=2, lb_upr=4)
+    params = _tiny_params(jax.random.PRNGKey(3))
+    st = controller.init_adapt_state(params, qcfg)
+    g = jax.tree.map(lambda p: jnp.ones_like(p) * 0.01, params)
+    st = controller.accumulate(st, g, jnp.float32(1.0))
+    st = controller.accumulate(st, g, jnp.float32(0.9))
+    fn = jax.jit(lambda s, p: controller.precision_switch(s, p, qcfg))
+    st2 = fn(st, params)
+    for ts in st2["tensors"].values():
+        assert bool(jnp.all(ts["fl"] < ts["wl"]))
+        assert bool(jnp.all(ts["wl"] <= qcfg.max_wl))

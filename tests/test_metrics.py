@@ -1,0 +1,46 @@
+"""Metrics/observability: JSONL stream + WL summaries + loop integration."""
+import tempfile
+
+import numpy as np
+
+from repro.config import load_config
+from repro.train import train_loop
+from repro.train.metrics import MetricsLogger, read_jsonl, wl_summary
+
+
+def test_wl_summary_aggregates():
+    snap = {
+        "a": {"wl": np.array([8, 16]), "fl": np.array([4, 8]),
+              "sp": np.array([1.0, 0.5]), "lb": np.array([25, 25]),
+              "res": np.array([50, 50])},
+        "b": {"wl": np.array(12), "fl": np.array(6), "sp": np.array(0.8),
+              "lb": np.array(25), "res": np.array(50)},
+    }
+    s = wl_summary(snap)
+    assert s["wl_min"] == 8 and s["wl_max"] == 16
+    assert abs(s["wl_mean"] - 12.0) < 1e-6
+    assert abs(s["size_units"] - (8 * 1.0 + 16 * 0.5 + 12 * 0.8)) < 1e-5
+    assert wl_summary({}) == {}
+
+
+def test_logger_roundtrip_and_training_integration():
+    cfg = load_config("tiny")
+    import dataclasses
+    cfg = dataclasses.replace(
+        cfg, train=dataclasses.replace(cfg.train, adapt_interval=4,
+                                       log_every=2))
+    with tempfile.TemporaryDirectory() as d:
+        logger = MetricsLogger(d, run_name="t", flush_every=1)
+        train_loop.train(cfg, steps=8, log=lambda s: None,
+                         metrics_logger=logger)
+        logger.log_event("shutdown", reason="test")
+        logger.close()
+        steps = read_jsonl(logger.path)
+        switches = read_jsonl(logger.switch_path)
+    step_recs = [r for r in steps if r["kind"] == "step"]
+    assert len(step_recs) == 4                      # log_every=2, 8 steps
+    assert all("loss" in r and "dt_s" in r for r in step_recs)
+    assert steps[-1]["kind"] == "shutdown"
+    assert len(switches) == 2                       # steps 4 and 8
+    assert all(s["wl_min"] >= 2 and s["wl_max"] <= 32 for s in switches)
+    assert all("tensors" in s for s in switches)

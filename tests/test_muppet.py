@@ -1,0 +1,53 @@
+"""MuPPET baseline (paper §2.2) invariants."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import muppet
+
+
+def test_block_fp_on_grid_and_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (512,)) * 2.0
+    for wl in (8, 12, 14, 16):
+        q = muppet.quantize_block_fp(x, wl)
+        s = muppet.block_fp_scale(x, wl)
+        scaled = q * jnp.exp2(s)
+        assert float(jnp.max(jnp.abs(scaled - jnp.round(scaled)))) < 1e-3
+        assert float(jnp.max(scaled)) <= 2.0 ** (wl - 1) - 1 + 1e-3
+        assert float(jnp.min(scaled)) >= -(2.0 ** (wl - 1)) - 1e-3
+
+
+def test_block_fp_error_shrinks_with_wl():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4096,))
+    errs = [float(jnp.mean(jnp.abs(muppet.quantize_block_fp(x, wl) - x)))
+            for wl in (8, 12, 14, 16)]
+    assert all(a >= b for a, b in zip(errs, errs[1:])), errs
+
+
+def test_wl32_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(2), (64,))
+    assert float(jnp.max(jnp.abs(muppet.quantize_block_fp(x, 32) - x))) == 0
+
+
+def test_precision_only_increases():
+    st = muppet.init_state(num_layers=4, threshold=1.05, violations_needed=2)
+    levels = [int(st["level"])]
+    # falling diversity → p = max/now grows → violations accumulate → switch
+    for div in (10.0, 8.0, 6.0, 5.0, 4.0, 3.5, 3.0, 2.5):
+        st = muppet.end_of_epoch(st, jnp.float32(div))
+        levels.append(int(st["level"]))
+    assert all(b >= a for a, b in zip(levels, levels[1:]))
+    assert levels[-1] > 0, "switch should have triggered"
+    assert int(muppet.current_wl(st)) in muppet.LADDER
+
+
+def test_quantize_params_respects_level():
+    params = {"w": jnp.ones((8, 8)) * 0.37, "b": jnp.ones((8,))}
+    st = muppet.init_state(1)
+    q = muppet.quantize_params(params, st)
+    assert q["w"].dtype == jnp.float32
+    # vectors pass through untouched
+    assert float(jnp.max(jnp.abs(q["b"] - 1.0))) == 0.0
+    # at the top level (float32) weights pass through too
+    st["level"] = jnp.int32(len(muppet.LADDER) - 1)
+    q32 = muppet.quantize_params(params, st)
+    assert float(jnp.max(jnp.abs(q32["w"] - params["w"]))) == 0.0

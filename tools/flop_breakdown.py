@@ -1,0 +1,119 @@
+"""Debug tool: per-op-name FLOP attribution for one dry-run cell."""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import defaultdict
+
+import jax
+
+from repro import sharding
+from repro.config import load_config, shape_kind
+from repro.launch import mesh as mesh_lib, specs as specs_lib
+from repro.roofline import hlo_costs
+from repro.serve import engine as engine_lib
+from repro.train import train_loop
+
+
+def compile_cell(arch, shape, multi_pod=False, overrides=None):
+    cfg = load_config(arch, shape, overrides=overrides)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    kind = shape_kind(shape)
+    rkind = "long" if shape == "long_500k" else kind
+    rules = mesh_lib.make_rules(cfg, mesh, rkind)
+    with sharding.use_rules(mesh, rules):
+        if kind == "train":
+            st = specs_lib.state_specs(cfg)
+            bt = specs_lib.batch_specs(cfg)
+            jfn = jax.jit(train_loop.make_train_step(cfg),
+                          in_shardings=(mesh_lib.state_shardings(st, cfg, mesh),
+                                        mesh_lib.batch_shardings(bt, mesh)),
+                          out_shardings=(mesh_lib.state_shardings(st, cfg, mesh), None))
+            return jfn.lower(st, bt).compile(), cfg
+        elif kind == "prefill":
+            sp = specs_lib.prefill_specs(cfg)
+            qsh = mesh_lib.param_shardings(sp["qparams"], cfg, mesh)
+            dsh = mesh_lib.batch_shardings(
+                {k: v for k, v in sp.items() if k != "qparams"}, mesh)
+            pf = engine_lib.make_prefill(cfg)
+            args = [sp["qparams"], sp["tokens"]]
+            in_sh = [qsh, dsh["tokens"]]
+            if "memory" in sp:
+                args.append(sp["memory"]); in_sh.append(dsh["memory"])
+            return jax.jit(pf, in_shardings=tuple(in_sh)).lower(*args).compile(), cfg
+        else:
+            sp = specs_lib.decode_specs(cfg)
+            qsh = mesh_lib.param_shardings(sp["qparams"], cfg, mesh)
+            csh = mesh_lib.cache_shardings(sp["caches"], cfg, mesh, rkind)
+            tsh = (mesh_lib.batch_shardings({"token": sp["token"]}, mesh)["token"]
+                   if shape != "long_500k" else mesh_lib.replicated(mesh))
+            fn = engine_lib.make_decode(cfg)
+            jfn = jax.jit(fn, in_shardings=(qsh, tsh, csh, mesh_lib.replicated(mesh)),
+                          out_shardings=(None, csh))
+            return jfn.lower(sp["qparams"], sp["token"], sp["caches"], sp["t"]).compile(), cfg
+
+
+def breakdown(text, top=20):
+    comps = hlo_costs.parse_module(text)
+    mult = defaultdict(float)
+    entry = next(c.name for c in comps.values() if c.is_entry)
+    mult[entry] = 1.0
+    order, seen, i = [entry], {entry}, 0
+    while i < len(order):
+        name = order[i]; i += 1
+        comp = comps[name]
+        for op in comp.ops:
+            if op.kind == "while":
+                m = hlo_costs._COND_BODY_RE.search(op.line)
+                if m:
+                    cond, body = m.groups()
+                    t, _ = hlo_costs._trip_count(
+                        comps.get(cond, hlo_costs.Computation(cond)))
+                    for ch in (body, cond):
+                        mult[ch] += mult[name] * t
+                        if ch not in seen:
+                            seen.add(ch); order.append(ch)
+            else:
+                m = hlo_costs._CALLS_RE.search(op.line)
+                if m:
+                    ch = m.group(1)
+                    mult[ch] += mult[name]
+                    if ch not in seen:
+                        seen.add(ch); order.append(ch)
+    agg = defaultdict(float)
+    coll = defaultdict(float)
+    for name, comp in comps.items():
+        for op in comp.ops:
+            mm = re.search(r'op_name="([^"]+)"', op.line)
+            tag = mm.group(1) if mm else op.name
+            tag = re.sub(r"\d+", "#", tag)[-120:]
+            if op.kind in ("dot", "convolution"):
+                f = (hlo_costs._dot_flops(op, comp) if op.kind == "dot"
+                     else hlo_costs._conv_flops(op, comp))
+                agg[tag] += f * mult.get(name, 1.0)
+            base = op.kind.replace("-start", "")
+            if base in hlo_costs.COLLECTIVES:
+                coll[f"{base} :: {tag}"] += (hlo_costs._op_bytes(op)
+                                             * mult.get(name, 1.0))
+    total = sum(agg.values())
+    print(f"total dot flops/chip: {total:.4e}")
+    for tag, f in sorted(agg.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"{f:.3e} {f / total * 100:5.1f}%  {tag}")
+    ctotal = sum(coll.values())
+    print(f"\ntotal collective bytes/chip: {ctotal / 2**30:.1f} GiB")
+    for tag, b in sorted(coll.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"{b / 2**30:8.2f} GiB {b / max(ctotal, 1) * 100:5.1f}%  {tag}")
+    return total
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--override", action="append", default=[])
+    args = ap.parse_args()
+    compiled, cfg = compile_cell(args.arch, args.shape, args.multi_pod,
+                                 args.override)
+    breakdown(compiled.as_text())

@@ -1,0 +1,57 @@
+"""§Perf hillclimb driver: compile one cell under a set of overrides and
+print the three roofline terms + collective breakdown, appending the record
+to experiments/perf/<tag>.json for the EXPERIMENTS.md log.
+
+    PYTHONPATH=src:. python tools/hillclimb.py --arch granite-8b \
+        --shape train_4k --tag bf16-container \
+        --override quant.container_dtype=bfloat16
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+
+from repro.config import load_config                 # noqa: E402
+from repro.launch.dryrun import lower_cell           # noqa: E402
+from repro.roofline import analysis                  # noqa: E402
+
+
+def run(arch, shape, overrides, tag, multi_pod=False, out="experiments/perf"):
+    rec = lower_cell(arch, shape, multi_pod=multi_pod, do_compile=True,
+                     overrides=overrides)
+    rec["tag"] = tag
+    rec["overrides"] = overrides
+    if rec["status"] != "compiled":
+        print(f"[{tag}] {rec['status']}: {rec.get('error', rec.get('reason'))}")
+        return rec
+    t = analysis.roofline_terms(rec)
+    chips = 512 if multi_pod else 256
+    useful = ""
+    if rec.get("kind") == "train":
+        cfg = load_config(arch, shape, overrides=overrides)
+        useful = f" useful={analysis.usefulness(rec, cfg, chips):.3f}"
+    print(f"[{tag}] {arch}×{shape}  compute={t['compute_s'] * 1e3:8.1f}ms  "
+          f"memory={t['memory_s'] * 1e3:8.1f}ms  "
+          f"collective={t['collective_s'] * 1e3:8.1f}ms  "
+          f"-> {t['bottleneck'].replace('_s', '')}{useful}")
+    coll = rec.get("collectives", {})
+    print(f"        collectives: " + "  ".join(
+        f"{k}={v / 2**30:.1f}GiB" for k, v in sorted(coll.items()) if v))
+    rec["terms"] = {k: v for k, v in t.items() if isinstance(v, float)}
+    os.makedirs(out, exist_ok=True)
+    name = f"{arch}_{shape}_{tag}".replace("/", "_").replace(".", "_")
+    with open(os.path.join(out, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--override", action="append", default=[])
+    a = ap.parse_args()
+    run(a.arch, a.shape, a.override, a.tag, a.multi_pod)
