@@ -1,0 +1,170 @@
+"""Microbenchmark: the precision-machinery fast path.
+
+Two hot spots, each measured XLA-reference vs fused-Pallas:
+
+  * ``quantize`` — the per-step quantize of every weight tensor (alg. 1).
+    Baseline: jax.random noise materialized in HBM + 5-op XLA quantize.
+    Fused: ``sr_quantize_fused`` — noise drawn in-kernel, one pass.
+  * ``switch`` — PushDown's EDF ladder (alg. 3). Baseline: 18 vmapped
+    quantize probes + 36 scatter-add histograms. Fused: one
+    ``edf_ladder_hists`` launch + KL/argmin epilogue.
+
+Besides wall times the run records the *structural* facts the perf claims
+rest on, read off the jaxprs (these hold on any backend):
+
+  * the fused quantize issues ≤ 2 param-sized HBM transfers per tensor
+    (kernel input + output) and materializes NO noise operand;
+  * the fused precision switch contains zero scatter-adds.
+
+Wall-clock numbers on a CPU container run the kernels in Pallas interpret
+mode and are NOT indicative of TPU performance (interpret mode evaluates
+the kernel op-by-op); they are recorded for trajectory only, flagged by
+``"backend"`` in the output. Emits ``BENCH_quant.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import jaxpr_tools
+from repro.core import fixed_point as fxp, pushdown
+from repro.kernels import ops
+
+SIZES = [(512, 512), (1024, 2048), (2048, 4096)]
+SIZES_QUICK = [(256, 256), (512, 512), (512, 1024)]
+
+
+def _time(fn, reps: int = 5) -> float:
+    jax.block_until_ready(fn())                   # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps
+
+
+# ---------------------------------------------------------------------------
+# jaxpr structure readers (shared walker: repro.jaxpr_tools)
+
+
+def _quantize_structure(n: int) -> dict:
+    """Param-sized HBM operands of the fused kernel call + noise audit."""
+    x = jnp.zeros((n,), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda v, s: ops.sr_quantize_fused(v, s, 8, 4, use_pallas=True)
+    )(x, jnp.int32(0)).jaxpr
+    transfers = 0
+    for e in jaxpr_tools.iter_eqns(jaxpr):
+        if e.primitive.name == "pallas_call":
+            transfers = sum(getattr(v.aval, "size", 0) >= n
+                            for v in list(e.invars) + list(e.outvars))
+    return {"noise_materialized":
+            bool(jaxpr_tools.rng_eqns_of_size(jaxpr, n)),
+            "kernel_param_sized_hbm_transfers": transfers}
+
+
+def _switch_structure(n: int) -> dict:
+    w = jnp.zeros((n,), jnp.float32)
+
+    def count_scatters(use_pallas):
+        jaxpr = jax.make_jaxpr(lambda v: pushdown.push_down(
+            v, jnp.int32(100), r_upr=150, eps_kl=1e-2,
+            use_pallas=use_pallas))(w).jaxpr
+        return jaxpr_tools.count_primitives(jaxpr, "scatter")
+
+    return {"baseline_scatter_adds": count_scatters(False),
+            "fused_scatter_adds": count_scatters(True)}
+
+
+# ---------------------------------------------------------------------------
+
+
+def bench_quantize(sizes, reps: int) -> list:
+    rows = []
+    for shape in sizes:
+        x = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+        key = jax.random.PRNGKey(1)
+        wl, fl = jnp.int32(8), jnp.int32(4)
+
+        @jax.jit
+        def xla_path(v, k, wl=wl, fl=fl):
+            u = jax.random.uniform(k, v.shape, jnp.float32)
+            return fxp.quantize(v, wl, fl, u=u)
+
+        @jax.jit
+        def fused_path(v, s, wl=wl, fl=fl):
+            return ops.sr_quantize_fused(v, s, wl, fl, use_pallas=True)
+
+        t_xla = _time(lambda: xla_path(x, key), reps=reps)
+        t_fused = _time(lambda: fused_path(x, jnp.int32(7)), reps=reps)
+        rows.append({
+            "shape": list(shape),
+            "elements": int(x.size),
+            "xla_ms": t_xla * 1e3,
+            "fused_pallas_ms": t_fused * 1e3,
+            **_quantize_structure(int(x.size)),
+        })
+        print(f"  quantize {shape}: xla {t_xla * 1e3:8.2f} ms | "
+              f"fused {t_fused * 1e3:8.2f} ms")
+    return rows
+
+
+def bench_switch(reps: int, sample: int = 65536) -> dict:
+    w = jax.random.normal(jax.random.PRNGKey(2), (sample,), jnp.float32)
+
+    base = jax.jit(lambda v: pushdown.push_down(
+        v, jnp.int32(100), r_upr=150, eps_kl=1e-2))
+    fused = jax.jit(lambda v: pushdown.push_down(
+        v, jnp.int32(100), r_upr=150, eps_kl=1e-2, use_pallas=True))
+
+    t_base = _time(lambda: base(w), reps=reps)
+    t_fused = _time(lambda: fused(w), reps=reps)
+    a, b = base(w), fused(w)
+    assert (int(a[0]), int(a[1])) == (int(b[0]), int(b[1])), \
+        "fused PushDown diverged from the reference"
+    print(f"  switch ({sample} sample): scatter {t_base * 1e3:8.2f} ms | "
+          f"ladder {t_fused * 1e3:8.2f} ms")
+    return {
+        "edf_sample": sample,
+        "scatter_ms": t_base * 1e3,
+        "ladder_kernel_ms": t_fused * 1e3,
+        "wl_fl_parity": True,
+        **_switch_structure(sample),
+    }
+
+
+def run(quick: bool = False, out: str = "BENCH_quant.json") -> dict:
+    print("\n== Precision-machinery microbenchmark ==")
+    backend = jax.default_backend()
+    if backend != "tpu":
+        print(f"  [note] backend={backend}: Pallas runs in interpret mode; "
+              "wall times are not TPU-indicative (structure checks are).")
+    sizes = SIZES_QUICK if quick else SIZES
+    reps = 3 if quick else 5
+    result = {
+        "backend": backend,
+        "interpret_mode": backend != "tpu",
+        "quantize": bench_quantize(sizes, reps),
+        "switch": bench_switch(reps, sample=16384 if quick else 65536),
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"  wrote {out}")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_quant.json")
+    args = ap.parse_args(argv)
+    run(quick=args.quick, out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

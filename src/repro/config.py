@@ -116,7 +116,21 @@ class QuantConfig:
     container_dtype: str = "float32"
     # sub-tensor exclusions (substring match on param path)
     exclude: Tuple[str, ...] = ("router", "norm", "a_log", "dt_bias", "scale")
-    use_pallas: bool = False      # route quantize through the Pallas kernel
+    # --- Pallas dispatch flags -------------------------------------------
+    # use_pallas routes the precision machinery through the fused TPU
+    # kernels (interpret mode on CPU, so CI exercises the same code):
+    #   * quantize_params / quantize_params_packed → sr_quantize_fused[:_int8]
+    #   * precision_switch's PushDown ladder        → edf_ladder_hists
+    #   * the model forward's matmuls/attention     → fxp_matmul / flash_attn
+    use_pallas: bool = False
+    # fused_prng draws the stochastic-rounding noise INSIDE the quantize
+    # kernel (hardware PRNG on TPU, counter-hash under interpret), so the
+    # param-sized U[0,1) tensor never exists in HBM: 2 HBM transfers per
+    # tensor instead of ~4. Only consulted when use_pallas is set; per-layer
+    # -stacked ⟨WL,FL⟩ leaves fall back to the XLA path (ROADMAP follow-on).
+    # Noise streams are deterministic per step key but differ from the
+    # jax.random stream the XLA path uses — same distribution, not same bits.
+    fused_prng: bool = True
 
 
 # ---------------------------------------------------------------------------

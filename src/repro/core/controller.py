@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from repro.config import QuantConfig
 from repro.core import fixed_point as fxp
 from repro.core import pushdown, pushup
+from repro.kernels import ops as kops
 
 Array = jax.Array
 PyTree = Any
@@ -167,7 +168,8 @@ def _switch_tensor(ts: Dict[str, Array], w: Array, strategy: Array,
         flat = pushdown.subsample(w_slice.reshape(-1).astype(jnp.float32),
                                   qcfg.edf_sample)
         wl_min, fl_min = pushdown.push_down(
-            flat, res, r_upr=qcfg.r_upr, eps_kl=qcfg.eps_kl, max_wl=qcfg.max_wl)
+            flat, res, r_upr=qcfg.r_upr, eps_kl=qcfg.eps_kl,
+            max_wl=qcfg.max_wl, use_pallas=qcfg.use_pallas)
         wl_new, fl_new = pushup.push_up(
             wl_min, fl_min, ds, strategy, buff=qcfg.buff, max_wl=qcfg.max_wl)
         lb_new = pushup.adapt_lookback(lb, ds, lb_lwr=qcfg.lb_lwr,
@@ -230,6 +232,24 @@ def _leaf_key(key: Array, path: str) -> Array:
     return jax.random.fold_in(key, h)
 
 
+def _leaf_seed(key: Array, path: str) -> Array:
+    """int32 scalar seed for the in-kernel PRNG, derived from the per-leaf
+    key so determinism-per-⟨step key, path⟩ is preserved."""
+    return jax.random.randint(_leaf_key(key, path), (), 0, 2 ** 31 - 1,
+                              jnp.int32)
+
+
+def _use_fused_prng(qcfg: QuantConfig, key, wl: Array, sharded: bool) -> bool:
+    """The in-kernel-PRNG kernel serves scalar-⟨WL,FL⟩ leaves under SR.
+    Two classes stay on the XLA path (ROADMAP follow-ons): per-layer-stacked
+    precision, and leaves with an explicit sharding — pallas_call has no
+    SPMD partitioning rule, so GSPMD would REPLICATE the kernel (all-gather
+    the f32 master), exactly the regression the noise-constraint machinery
+    exists to prevent; the fused kernel needs a shard_map wrapper first."""
+    return (qcfg.use_pallas and qcfg.fused_prng and qcfg.stochastic_rounding
+            and key is not None and not wl.shape and not sharded)
+
+
 def quantize_params(params: PyTree, state: Dict[str, Any], qcfg: QuantConfig,
                     key: Array | None = None, dtype=jnp.float32,
                     shardings: PyTree | None = None) -> PyTree:
@@ -241,7 +261,11 @@ def quantize_params(params: PyTree, state: Dict[str, Any], qcfg: QuantConfig,
     The SR noise is constrained to each tensor's sharding — without this
     GSPMD resolves (sharded master × replicated noise) by ALL-GATHERING the
     f32 master before quantizing (measured: the entire 5.6 TiB/step arctic
-    gather volume ran in f32 regardless of container dtype; §Perf).
+    gather volume ran in f32 regardless of container dtype; §Perf). With
+    ``use_pallas`` + ``fused_prng``, UNSHARDED leaves skip the noise tensor
+    entirely (drawn inside the kernel — one fewer param-sized HBM round
+    trip); sharded leaves keep the noise+constraint path, since pallas_call
+    has no SPMD partitioning rule and would be replicated by GSPMD.
 
     ``dtype=jnp.int8`` emits the native-int8 path: round(w·2^FL) lives as an
     int8 tensor in the graph (exact for WL≤8), dequantized to bf16 at the
@@ -262,6 +286,18 @@ def quantize_params(params: PyTree, state: Dict[str, Any], qcfg: QuantConfig,
             return leaf.astype(out_dtype)
         ts = tensors[p]
         wl, fl = ts["wl"], ts["fl"]
+        if _use_fused_prng(qcfg, key, wl,
+                           flat_sh is not None and p in flat_sh):
+            # single-pass Pallas kernel, noise drawn in-register: the only
+            # param-sized HBM traffic is leaf-in / quantized-out.
+            seed = _leaf_seed(key, p)
+            if int8:
+                q8 = kops.sr_quantize_fused_int8(leaf, seed, fl,
+                                                 use_pallas=True)
+                return (q8.astype(jnp.bfloat16)
+                        * jnp.exp2(-jnp.asarray(fl, jnp.bfloat16)))
+            return kops.sr_quantize_fused(leaf, seed, wl, fl,
+                                          use_pallas=True).astype(out_dtype)
         if wl.shape:  # stacked: broadcast (L,) -> (L,1,...)
             bshape = wl.shape + (1,) * (leaf.ndim - 1)
             wl = wl.reshape(bshape)
@@ -313,6 +349,16 @@ def quantize_params_packed(params: PyTree, state: Dict[str, Any],
             return leaf.astype(jnp.bfloat16)
         ts = tensors[p]
         fl = ts["fl"]
+        if _use_fused_prng(qcfg, key, fl,
+                           flat_sh is not None and p in flat_sh):
+            # in-kernel PRNG: the int8 words are produced in one pass with
+            # no noise operand — the packed wire payload never sees f32.
+            # (Only unsharded leaves reach here, so no constraints needed.)
+            q8 = kops.sr_quantize_fused_int8(leaf, _leaf_seed(key, p), fl,
+                                             use_pallas=True)
+            sc = jnp.exp2(-jnp.asarray(fl, jnp.bfloat16))
+            return {"q8": q8, "sc": sc,
+                    "wref": jnp.zeros(leaf.shape, jnp.bfloat16)}
         if fl.shape:
             fl = fl.reshape(fl.shape + (1,) * (leaf.ndim - 1))
         u = None

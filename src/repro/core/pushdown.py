@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fixed_point as fxp
+from repro.kernels import ops as kops
 
 Array = jax.Array
 
@@ -70,19 +71,10 @@ def kl_for_wl(w: Array, wl: Array, r: Array, r_upr: int) -> tuple[Array, Array]:
     return kl_bits(hq, hw), fl
 
 
-def push_down(w_flat: Array, r: Array, *, r_upr: int, eps_kl: float,
-              max_wl: int = 32) -> tuple[Array, Array]:
-    """Smallest ⟨WL_min, FL_min⟩ with KL < eps_kl over the WL ladder.
-
-    w_flat: pre-subsampled 1-D f32 view of the tensor.
-    Returns int32 scalars (wl_min, fl_min).
-    """
+def _select_wl(kls: Array, fls: Array, *, eps_kl: float,
+               max_wl: int) -> tuple[Array, Array]:
+    """Smallest feasible rung of the ladder given per-candidate KLs/FLs."""
     ladder = jnp.asarray(WL_LADDER, jnp.int32)
-
-    def probe(wl):
-        return kl_for_wl(w_flat, wl, r, r_upr)
-
-    kls, fls = jax.vmap(probe)(ladder)
     ok = (kls < eps_kl) & (ladder <= max_wl)
     # First feasible index; fall back to the widest allowed word.
     first = jnp.argmax(ok)                       # 0 if none ok, guard below
@@ -94,3 +86,34 @@ def push_down(w_flat: Array, r: Array, *, r_upr: int, eps_kl: float,
     wl_min = jnp.minimum(wl_min, max_wl).astype(jnp.int32)
     fl_min = jnp.clip(fl_min, 0, wl_min - 1).astype(jnp.int32)
     return wl_min, fl_min
+
+
+def push_down(w_flat: Array, r: Array, *, r_upr: int, eps_kl: float,
+              max_wl: int = 32, use_pallas: bool = False
+              ) -> tuple[Array, Array]:
+    """Smallest ⟨WL_min, FL_min⟩ with KL < eps_kl over the WL ladder.
+
+    w_flat: pre-subsampled 1-D f32 view of the tensor.
+    Returns int32 scalars (wl_min, fl_min).
+
+    ``use_pallas`` routes the 18 quantize+histogram probes through the fused
+    EDF-ladder kernel: one pass over the data, no scatter-adds, followed by
+    a tiny KL/argmin epilogue. The selected ⟨WL,FL⟩ matches this function's
+    XLA reference path bit-for-bit (same bin edges, same RN quantizer).
+    """
+    if use_pallas:
+        amax = jnp.max(jnp.abs(w_flat))
+        fls = fxp.fl_for_wl(amax, jnp.asarray(WL_LADDER, jnp.int32))
+        counts = kops.edf_ladder_hists(w_flat, fls, r, wl_ladder=WL_LADDER,
+                                       r_upr=r_upr, use_pallas=True)
+        hw = counts[0]
+        kls = jax.vmap(lambda hq: kl_bits(hq, hw))(counts[1:])
+        return _select_wl(kls, fls, eps_kl=eps_kl, max_wl=max_wl)
+
+    ladder = jnp.asarray(WL_LADDER, jnp.int32)
+
+    def probe(wl):
+        return kl_for_wl(w_flat, wl, r, r_upr)
+
+    kls, fls = jax.vmap(probe)(ladder)
+    return _select_wl(kls, fls, eps_kl=eps_kl, max_wl=max_wl)

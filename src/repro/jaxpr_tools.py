@@ -1,0 +1,45 @@
+"""Tiny jaxpr structure readers shared by the structural tests and the
+quant microbenchmark — the fast-path perf claims ("no materialized noise
+operand", "no scatter-add histograms", "≤2 param-sized kernel operands")
+are read off the traced program, so they hold on any backend.
+"""
+from __future__ import annotations
+
+from jax.core import ClosedJaxpr, Jaxpr
+
+# RNG primitives whose param-sized outputs would mean a materialized
+# noise tensor (jax.random.uniform lowers to these under jit).
+RNG_PRIMS = ("threefry", "random_bits", "random_seed", "random_wrap")
+
+
+def subjaxprs(v):
+    """All jaxprs nested inside one eqn-params value."""
+    if isinstance(v, ClosedJaxpr):
+        return [v.jaxpr]
+    if isinstance(v, Jaxpr):
+        return [v]
+    if isinstance(v, (list, tuple)):
+        return [s for x in v for s in subjaxprs(x)]
+    return []
+
+
+def iter_eqns(jaxpr):
+    """Depth-first over every eqn, descending into sub-jaxprs (scan/cond/
+    pjit/custom_vjp bodies and anything else carried in eqn params)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in subjaxprs(v):
+                yield from iter_eqns(sub)
+
+
+def rng_eqns_of_size(jaxpr, min_size: int):
+    """RNG eqns producing an output of ≥ min_size elements."""
+    return [eqn for eqn in iter_eqns(jaxpr)
+            if any(r in eqn.primitive.name for r in RNG_PRIMS)
+            and any(getattr(ov.aval, "size", 0) >= min_size
+                    for ov in eqn.outvars)]
+
+
+def count_primitives(jaxpr, name_substr: str) -> int:
+    return sum(name_substr in eqn.primitive.name for eqn in iter_eqns(jaxpr))

@@ -1,0 +1,18 @@
+"""Version-compat helpers shared by all Pallas TPU kernels.
+
+JAX renamed ``pltpu.TPUCompilerParams`` → ``pltpu.CompilerParams`` across
+releases; depending on the pinned jaxlib exactly one of the two exists.
+Every kernel goes through :func:`tpu_compiler_params` so the spelling is
+resolved in one place.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU compiler-params object under either JAX spelling."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import tpu_compiler_params
+
 Array = jax.Array
 
 NEG_INF = -1e30
@@ -122,7 +124,7 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
             pltpu.VMEM((bq, D), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
     )(qt, kt, vt)

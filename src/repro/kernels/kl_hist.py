@@ -55,7 +55,9 @@ def kl_hist(w: Array, q: Array, *, num_bins: int = 256, block_rows: int = 64,
             interpret: bool = False) -> Array:
     """Counts (2, num_bins) of ``w`` and ``q`` over w's [min, max] range.
 
-    Padding elements are parked in bin 0 and subtracted afterwards.
+    Lane padding is FILLED with ``lo`` (w's minimum) so every pad element
+    deterministically bins to index 0 regardless of the tensor's range;
+    the known pad count is then subtracted from bin 0 of both histograms.
     """
     wf = w.reshape(-1).astype(jnp.float32)
     qf = q.reshape(-1).astype(jnp.float32)

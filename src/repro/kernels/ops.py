@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import edf_ladder as _el
 from repro.kernels import flash_attention as _fa
 from repro.kernels import fxp_matmul as _fm
 from repro.kernels import kl_hist as _kh
@@ -28,6 +29,45 @@ def sr_quantize(x: Array, u: Array, wl, fl, *, use_pallas: bool = False) -> Arra
                                jnp.asarray(fl, jnp.int32),
                                interpret=not _on_tpu())
     return ref.ref_sr_quantize(x, u, wl, fl)
+
+
+def sr_quantize_fused(x: Array, seed, wl, fl, *,
+                      use_pallas: bool = False) -> Array:
+    """SR quantize with in-kernel noise (no U[0,1) tensor in HBM). The
+    hardware PRNG is used on compiled TPU runs; interpret mode (CPU CI) uses
+    the kernel's portable counter-hash stream; the non-Pallas fallback draws
+    an explicit jax.random stream. All are deterministic per seed."""
+    if use_pallas:
+        on_tpu = _on_tpu()
+        return _sq.sr_quantize_fused(x, jnp.asarray(seed, jnp.int32),
+                                     jnp.asarray(wl, jnp.int32),
+                                     jnp.asarray(fl, jnp.int32),
+                                     interpret=not on_tpu, hw_prng=on_tpu)
+    return ref.ref_sr_quantize_fused(x, seed, wl, fl)
+
+
+def sr_quantize_fused_int8(x: Array, seed, fl, *,
+                           use_pallas: bool = False) -> Array:
+    """Int8-word flavor of :func:`sr_quantize_fused` for the native_int8 /
+    packed path: returns the int8 fixed-point words (dequant = q8·2^-FL)."""
+    if use_pallas:
+        on_tpu = _on_tpu()
+        return _sq.sr_quantize_fused_int8(x, jnp.asarray(seed, jnp.int32),
+                                          jnp.asarray(fl, jnp.int32),
+                                          interpret=not on_tpu,
+                                          hw_prng=on_tpu)
+    return ref.ref_sr_quantize_fused_int8(x, seed, fl)
+
+
+def edf_ladder_hists(w: Array, fls: Array, r, *, wl_ladder: tuple,
+                     r_upr: int, use_pallas: bool = False) -> Array:
+    """(1+T, r_upr) master + per-WL-candidate histograms in one data pass."""
+    if use_pallas:
+        return _el.edf_ladder_hists(w, fls, jnp.asarray(r, jnp.int32),
+                                    wl_ladder=wl_ladder, r_upr=r_upr,
+                                    interpret=not _on_tpu())
+    return ref.ref_edf_ladder_hists(w, fls, jnp.asarray(r, jnp.int32),
+                                    wl_ladder=wl_ladder, r_upr=r_upr)
 
 
 def fxp_matmul(x: Array, wq: Array, scale: Array, *, use_pallas: bool = False,

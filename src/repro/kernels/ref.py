@@ -23,6 +23,48 @@ def ref_sr_quantize(x: Array, u: Array, wl: int, fl: int) -> Array:
     return (q / scale).astype(x.dtype)
 
 
+def ref_sr_quantize_fused(x: Array, seed: Array, wl: int, fl: int) -> Array:
+    """Oracle for the in-kernel-PRNG variant: same grid semantics, noise
+    drawn from jax.random keyed on ``seed``. Deterministic per seed but a
+    *different* stream than the kernel's (hardware or counter-hash) PRNG —
+    parity with the kernel is distributional, not bitwise."""
+    u = jax.random.uniform(jax.random.PRNGKey(seed), x.shape, jnp.float32)
+    return ref_sr_quantize(x, u, wl, fl)
+
+
+def ref_sr_quantize_fused_int8(x: Array, seed: Array, fl: int) -> Array:
+    """Oracle for the int8-word flavor (int8 storage clip, WL≤8 by mode)."""
+    u = jax.random.uniform(jax.random.PRNGKey(seed), x.shape, jnp.float32)
+    xf = x.astype(jnp.float32) * jnp.float32(2.0) ** fl
+    f = jnp.floor(xf)
+    q = f + (u < (xf - f)).astype(jnp.float32)
+    return jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
+
+
+def ref_edf_ladder_hists(w: Array, fls: Array, r: Array, *, wl_ladder: tuple,
+                         r_upr: int) -> Array:
+    """Oracle for the fused EDF ladder: scatter-add histograms of the master
+    weights and each round-to-nearest ⟨WL,FL⟩-requantized candidate, r live
+    bins inside a static r_upr buffer over w's [min, max] range."""
+    wf = w.reshape(-1).astype(jnp.float32)
+    lo, hi = jnp.min(wf), jnp.max(wf)
+    span = jnp.maximum(hi - lo, 1e-12)
+    rf = r.astype(jnp.float32)
+
+    def hist(x):
+        idx = jnp.clip(jnp.floor((x - lo) / span * rf),
+                       0, rf - 1).astype(jnp.int32)
+        return jnp.zeros((r_upr,), jnp.float32).at[idx].add(1.0)
+
+    rows = [hist(wf)]
+    for t, wl in enumerate(wl_ladder):
+        scale = jnp.exp2(fls[t].astype(jnp.float32))
+        qmax = jnp.float32(2.0 ** (wl - 1) - 1.0)
+        q = jnp.clip(jnp.round(wf * scale), -qmax - 1.0, qmax) / scale
+        rows.append(hist(q))
+    return jnp.stack(rows)
+
+
 def ref_fxp_matmul(x: Array, wq: Array, scale: Array,
                    bias: Array | None = None) -> Array:
     """x @ (wq * scale) with f32 accumulation.

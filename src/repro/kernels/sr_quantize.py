@@ -1,14 +1,30 @@
-"""Pallas TPU kernel: fixed-point stochastic-rounding quantize (VPU, tiled).
+"""Pallas TPU kernels: fixed-point stochastic-rounding quantize (VPU, tiled).
 
 The quantize→dequantize of every weight tensor runs once per optimizer step
 (alg. 1 ln. 9–11) over *all* parameters — on an 8B model that is 8 G elements
-of pure elementwise traffic, i.e. strictly HBM-bandwidth-bound. The kernel
-tiles HBM→VMEM in (block_rows, 512)-float chunks and fuses scale/round/clip/
+of pure elementwise traffic, i.e. strictly HBM-bandwidth-bound. The kernels
+tile HBM→VMEM in (block_rows, 512)-float chunks and fuse scale/round/clip/
 descale into one pass (vs 5+ XLA ops → one read+write of the tensor instead
 of several).
 
-⟨WL,FL⟩ arrive as an SMEM (1,2) int32 operand so one compiled kernel serves
-every precision the controller chooses at runtime.
+Two families:
+
+* ``sr_quantize`` — takes a precomputed U[0,1) noise tensor. Three
+  param-sized HBM transfers per tensor (x in, u in, q out), *plus* the
+  earlier write of u when jax.random generated it: ~4 total.
+* ``sr_quantize_fused`` / ``sr_quantize_fused_int8`` — draws the noise
+  *inside* the kernel, so the U[0,1) tensor never exists in HBM: exactly
+  two param-sized transfers per tensor (x in, q out). On TPU the noise
+  comes from the hardware PRNG (``pltpu.prng_seed`` seeded per ⟨seed,
+  block⟩ + ``pltpu.prng_random_bits``); under ``interpret=True`` (CPU/CI,
+  where those primitives have no lowering) an in-kernel counter-based
+  hash (splitmix/murmur3-finalizer over the global element index) supplies
+  the bits instead. Both streams are deterministic per seed; they are
+  *different* streams, so cross-backend runs agree in distribution (and on
+  every grid/clip property) but not bit-for-bit.
+
+⟨WL,FL⟩ (and the seed) arrive as an SMEM int32 operand so one compiled
+kernel serves every precision the controller chooses at runtime.
 """
 from __future__ import annotations
 
@@ -67,3 +83,132 @@ def sr_quantize(x: Array, u: Array, wl: Array, fl: Array, *,
         interpret=interpret,
     )(wlfl, x2, u2)
     return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused-PRNG variants: noise is drawn inside the kernel, never touching HBM.
+
+
+def _hash_uniform(seed: Array, shape, row0: Array, cols: int) -> Array:
+    """Portable in-kernel U[0,1): murmur3-finalizer of the global element
+    index mixed with the seed (golden-ratio stride). Runs anywhere — it is
+    the noise source whenever the hardware PRNG primitives are unavailable
+    (interpret mode / CPU CI). Index arithmetic wraps mod 2^32, so streams
+    repeat only beyond 4G-element tensors."""
+    r = jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+    c = jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+    h = (row0.astype(jnp.uint32) + r) * jnp.uint32(cols) + c
+    h = h + seed.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+    h ^= h >> 16
+    h = h * jnp.uint32(0x7FEB352D)
+    h ^= h >> 15
+    h = h * jnp.uint32(0x846CA68B)
+    h ^= h >> 16
+    return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def _inkernel_uniform(seed: Array, shape, block_rows: int, cols: int,
+                      hw_prng: bool) -> Array:
+    if hw_prng:
+        # Distinct hardware stream per ⟨seed, block⟩; reseeding per block
+        # keeps the stream independent of the grid schedule.
+        pltpu.prng_seed(seed, pl.program_id(0))
+        bits = pltpu.prng_random_bits(shape)
+        u32 = pltpu.bitcast(bits, jnp.uint32)
+        return (u32 >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+    row0 = pl.program_id(0) * block_rows
+    return _hash_uniform(seed, shape, row0, cols)
+
+
+def _sr_fused_kernel(ctl_ref, x_ref, o_ref, *, block_rows: int, cols: int,
+                     hw_prng: bool):
+    wl = ctl_ref[0, 0].astype(jnp.float32)
+    fl = ctl_ref[0, 1].astype(jnp.float32)
+    seed = ctl_ref[0, 2]
+    scale = jnp.exp2(fl)
+    qmax = jnp.exp2(wl - 1.0) - 1.0
+    x = x_ref[...].astype(jnp.float32)
+    u = _inkernel_uniform(seed, x.shape, block_rows, cols, hw_prng)
+    s = x * scale
+    f = jnp.floor(s)
+    q = f + (u < (s - f)).astype(jnp.float32)
+    q = jnp.clip(q, -qmax - 1.0, qmax)
+    o_ref[...] = (q / scale).astype(o_ref.dtype)
+
+
+def _sr_fused_int8_kernel(ctl_ref, x_ref, o_ref, *, block_rows: int,
+                          cols: int, hw_prng: bool):
+    # Native-int8 storage path: the word is clipped to int8 range (WL≤8 by
+    # construction of the mode), matching controller.quantize_params' int8
+    # branch; dequant (· 2^-FL) happens at the consumer.
+    fl = ctl_ref[0, 0].astype(jnp.float32)
+    seed = ctl_ref[0, 1]
+    scale = jnp.exp2(fl)
+    x = x_ref[...].astype(jnp.float32)
+    u = _inkernel_uniform(seed, x.shape, block_rows, cols, hw_prng)
+    s = x * scale
+    f = jnp.floor(s)
+    q = f + (u < (s - f)).astype(jnp.float32)
+    o_ref[...] = jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
+
+
+def _fused_call(kernel, ctl: Array, x: Array, out_dtype, *, block_rows: int,
+                interpret: bool, hw_prng: bool):
+    n = x.size
+    cols = LANE * 4
+    rows = pl.cdiv(n, cols)
+    pad = rows * cols - n
+    x2 = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, pad)).reshape(rows, cols)
+    grid = (pl.cdiv(rows, block_rows),)
+    body = functools.partial(kernel, block_rows=block_rows, cols=cols,
+                             hw_prng=hw_prng)
+    out = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),     # ⟨wl,fl,seed⟩ / ⟨fl,seed⟩
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), out_dtype),
+        interpret=interpret,
+    )(ctl, x2)
+    return out.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret",
+                                             "hw_prng"))
+def sr_quantize_fused(x: Array, seed: Array, wl: Array, fl: Array, *,
+                      block_rows: int = 256, interpret: bool = False,
+                      hw_prng: bool = False) -> Array:
+    """SR quantize with in-kernel noise: 2 param-sized HBM transfers total.
+
+    x: any shape/float dtype; seed: int32 scalar; wl/fl: int32 scalars.
+    ``hw_prng=True`` uses the TPU hardware PRNG (compiled TPU runs only);
+    otherwise the portable counter-hash stream is used. Deterministic per
+    ⟨seed, block_rows⟩ either way.
+    """
+    shape, dtype = x.shape, x.dtype
+    ctl = jnp.stack([jnp.asarray(wl), jnp.asarray(fl),
+                     jnp.asarray(seed)]).astype(jnp.int32).reshape(1, 3)
+    out = _fused_call(_sr_fused_kernel, ctl, x, jnp.float32,
+                      block_rows=block_rows, interpret=interpret,
+                      hw_prng=hw_prng)
+    return out.reshape(shape).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret",
+                                             "hw_prng"))
+def sr_quantize_fused_int8(x: Array, seed: Array, fl: Array, *,
+                           block_rows: int = 256, interpret: bool = False,
+                           hw_prng: bool = False) -> Array:
+    """Int8-word flavor for the native_int8/packed path: returns
+    round-stochastic(x·2^FL) clipped to int8, as an int8 tensor. Dequant is
+    ``q8 * 2^-FL`` at the consumer (after the FSDP gather)."""
+    shape = x.shape
+    ctl = jnp.stack([jnp.asarray(fl),
+                     jnp.asarray(seed)]).astype(jnp.int32).reshape(1, 2)
+    out = _fused_call(_sr_fused_int8_kernel, ctl, x, jnp.int8,
+                      block_rows=block_rows, interpret=interpret,
+                      hw_prng=hw_prng)
+    return out.reshape(shape)

@@ -114,16 +114,15 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
                 "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0) or
                                   getattr(mem, "temp_size_in_bytes", 0)),
             }
-        cost = compiled.cost_analysis()
-        if cost:
-            c = cost if isinstance(cost, dict) else cost[0]
+        from repro.roofline import hlo_costs
+        c = hlo_costs.xla_cost_analysis(compiled)
+        if c:
             # NB: XLA counts while bodies once — kept for reference only;
             # the roofline uses the trip-count-aware walker below.
             rec["xla_cost_analysis"] = {
                 k: float(v) for k, v in c.items()
                 if isinstance(v, (int, float)) and
                 k in ("flops", "bytes accessed", "transcendentals")}
-        from repro.roofline import hlo_costs
         walked = hlo_costs.module_costs(compiled.as_text())
         rec["cost"] = {"flops": walked["flops"],
                        "bytes accessed": walked["bytes"]}

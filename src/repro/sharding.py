@@ -82,6 +82,23 @@ def named_sharding(*logical_axes: Optional[str]) -> Optional[NamedSharding]:
     return NamedSharding(mesh, spec(*logical_axes))
 
 
+def shard_map(f, mesh: Mesh, *, axis_names, in_specs, out_specs,
+              check: bool = False):
+    """Version-compat shard_map, manual ONLY over ``axis_names`` (auto over
+    the rest of the mesh). Newer JAX spells this ``jax.shard_map(...,
+    axis_names=..., check_vma=...)``; the pinned jaxlib only ships
+    ``jax.experimental.shard_map.shard_map(..., auto=..., check_rep=...)``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, axis_names=set(axis_names),
+                             in_specs=in_specs, out_specs=out_specs,
+                             check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check, auto=auto)
+
+
 def strip_axes(rules: Dict[str, tuple], axes) -> Dict[str, tuple]:
     """Rules with the given mesh axes removed (e.g. inside a shard_map that
     is manual over 'pod', constraints may only name auto axes)."""

@@ -83,8 +83,13 @@ def _task_loss(cfg: Config, qparams, stats, batch, act_wl=None,
         targets, shift = batch["tokens"], True
     if m.cross_attn_every:
         kwargs["memory"] = batch["memory"]
+    # The forward here sits under value_and_grad, and the forward kernels
+    # (flash_attention / fxp_matmul) have no custom VJP yet — differentiating
+    # through pallas_call fails. quant.use_pallas therefore only routes the
+    # NON-differentiated precision machinery (quantize_params, PushDown) in
+    # training; serving (serve/engine.py, no grad) uses the forward kernels.
     logits = transformer.forward(qparams, m, act_wl=act_wl,
-                                 use_pallas=cfg.quant.use_pallas,
+                                 use_pallas=False,
                                  remat=cfg.train.remat, **kwargs)
     return transformer.lm_loss(logits, targets, shift=shift), {"stats": stats}
 
@@ -99,7 +104,12 @@ def make_train_step(cfg: Config, qparam_shardings=None) -> Callable:
     noise) elementwise quantize to a REPLICATED output — i.e. all-gather the
     f32 master instead of the small quantized container (measured on
     granite-8b: the 96 GiB/step gather didn't shrink under a bf16 container
-    until this constraint pinned it; EXPERIMENTS.md §Perf)."""
+    until this constraint pinned it; EXPERIMENTS.md §Perf). Under
+    ``quant.use_pallas`` + ``quant.fused_prng``, leaves WITHOUT a sharding
+    entry draw the SR noise inside the quantize kernel (no noise tensor,
+    one fewer param-sized HBM round trip); sharded leaves keep the
+    noise+constraint path because pallas_call cannot be partitioned by
+    GSPMD (controller._use_fused_prng)."""
     qcfg, ocfg, tcfg = cfg.quant, cfg.optimizer, cfg.train
 
     def train_step(state: Dict[str, Any], batch: Dict[str, Array]
@@ -197,10 +207,10 @@ def make_train_step(cfg: Config, qparam_shardings=None) -> Callable:
                 return (jax.lax.pmean(loss, "pod"),
                         jax.lax.pmean(task, "pod"), aux, g)
 
-            loss, task, aux, grads = jax.shard_map(
-                pod_local, mesh=mesh, axis_names={"pod"},
+            loss, task, aux, grads = shd.shard_map(
+                pod_local, mesh, axis_names={"pod"},
                 in_specs=(P(), P("pod")), out_specs=P(),
-                check_vma=False)(qparams, batch)
+                check=False)(qparams, batch)
         else:
             loss, task, aux, grads = compute_grads(qparams, batch)
 

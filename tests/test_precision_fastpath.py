@@ -1,0 +1,304 @@
+"""The fused precision-machinery fast path: in-kernel-PRNG quantize + the
+EDF-ladder kernel, their wiring into controller/pushdown, and the structural
+guarantees the perf claims rest on (no materialized noise operand, no
+scatter-add histograms)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import jaxpr_tools
+from repro.config import QuantConfig
+from repro.core import controller, fixed_point as fxp, pushdown
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _pathological(name):
+    k = jax.random.PRNGKey(0)
+    return {
+        "normal": jax.random.normal(k, (9000,)),
+        "zeros": jnp.zeros((5000,)),
+        "spike": jnp.zeros((4096,)).at[17].set(3.7),
+        "bimodal": jnp.concatenate(
+            [jax.random.normal(k, (4096,)) - 4.0,
+             jax.random.normal(jax.random.fold_in(k, 1), (4096,)) + 4.0]),
+        "coarse": fxp.quantize(jax.random.normal(k, (8192,)), 5, 3),
+    }[name]
+
+
+PATHOLOGICAL = ["normal", "zeros", "spike", "bimodal", "coarse"]
+
+
+# ---------------------------------------------------------------------------
+# EDF-ladder kernel: histogram counts against the scatter oracle
+
+
+@pytest.mark.parametrize("n", [100, 4096, 65536])
+@pytest.mark.parametrize("r", [50, 100, 150])
+def test_edf_ladder_counts_match_ref(n, r):
+    w = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    fls = fxp.fl_for_wl(jnp.max(jnp.abs(w)),
+                        jnp.asarray(pushdown.WL_LADDER, jnp.int32))
+    got = ops.edf_ladder_hists(w, fls, r, wl_ladder=pushdown.WL_LADDER,
+                               r_upr=150, use_pallas=True)
+    want = ref.ref_edf_ladder_hists(w, fls, jnp.int32(r),
+                                    wl_ladder=pushdown.WL_LADDER, r_upr=150)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+    # every histogram row counts exactly n elements
+    np.testing.assert_allclose(np.asarray(got).sum(axis=1), n, atol=1e-3)
+
+
+@pytest.mark.parametrize("case", PATHOLOGICAL)
+def test_edf_ladder_counts_pathological(case):
+    w = _pathological(case)
+    fls = fxp.fl_for_wl(jnp.max(jnp.abs(w)),
+                        jnp.asarray(pushdown.WL_LADDER, jnp.int32))
+    got = ops.edf_ladder_hists(w, fls, 100, wl_ladder=pushdown.WL_LADDER,
+                               r_upr=150, use_pallas=True)
+    want = ref.ref_edf_ladder_hists(w, fls, jnp.int32(100),
+                                    wl_ladder=pushdown.WL_LADDER, r_upr=150)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# push_down: fused path picks the same ⟨WL,FL⟩ as the XLA reference
+
+
+@pytest.mark.parametrize("case", PATHOLOGICAL)
+@pytest.mark.parametrize("r", [50, 150])
+def test_push_down_fused_parity(case, r):
+    w = _pathological(case)
+    want = pushdown.push_down(w, jnp.int32(r), r_upr=150, eps_kl=1e-2)
+    got = pushdown.push_down(w, jnp.int32(r), r_upr=150, eps_kl=1e-2,
+                             use_pallas=True)
+    assert (int(got[0]), int(got[1])) == (int(want[0]), int(want[1]))
+
+
+def test_push_down_fused_parity_vmapped():
+    """Per-layer-stacked tensors route through a vmapped kernel launch."""
+    k = jax.random.PRNGKey(5)
+    ws = jnp.stack([jax.random.normal(k, (4096,)),
+                    fxp.quantize(jax.random.normal(k, (4096,)), 4, 2),
+                    jnp.zeros((4096,))])
+    rs = jnp.array([100, 60, 150], jnp.int32)
+    f = jax.vmap(lambda w, r: pushdown.push_down(
+        w, r, r_upr=150, eps_kl=1e-2, use_pallas=True))
+    g = jax.vmap(lambda w, r: pushdown.push_down(
+        w, r, r_upr=150, eps_kl=1e-2))
+    np.testing.assert_array_equal(np.asarray(f(ws, rs)), np.asarray(g(ws, rs)))
+
+
+# ---------------------------------------------------------------------------
+# In-kernel-PRNG stochastic rounding: grid, determinism, expectation
+
+
+def test_fused_sr_on_grid_and_range():
+    x = jax.random.normal(KEY, (4096,)) * 10
+    q = ops.sr_quantize_fused(x, 3, 8, 4, use_pallas=True)
+    scaled = np.asarray(q) * 16
+    np.testing.assert_array_equal(scaled, np.round(scaled))
+    assert scaled.min() >= -128 and scaled.max() <= 127
+
+
+@pytest.mark.parametrize("shape", [(7,), (33, 65), (4, 3, 50), (256, 512)])
+def test_fused_sr_deterministic_per_seed(shape):
+    x = jax.random.normal(KEY, shape) * 3
+    a = ops.sr_quantize_fused(x, 11, 8, 4, use_pallas=True)
+    b = ops.sr_quantize_fused(x, 11, 8, 4, use_pallas=True)
+    c = ops.sr_quantize_fused(x, 12, 8, 4, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert a.shape == shape and np.asarray(a != c).any()
+
+
+def test_fused_sr_expectation():
+    """E[q] ≈ x on the representable range (SR is unbiased)."""
+    x = jax.random.normal(KEY, (512,))
+    reps = 256
+    qs = jnp.stack([ops.sr_quantize_fused(x, s, 8, 4, use_pallas=True)
+                    for s in range(reps)])
+    clip = jnp.clip(x, -(2.0 ** 3), 2.0 ** 3 - 2.0 ** -4)
+    bias = jnp.abs(jnp.mean(qs, 0) - clip)
+    # SE of the mean of a ±half-step Bernoulli residual, with slack
+    assert float(jnp.max(bias)) < 4 * (2.0 ** -4) / np.sqrt(reps) * 4
+
+
+def test_fused_sr_int8_words():
+    x = jax.random.normal(KEY, (2048,)) * 4
+    q8 = ops.sr_quantize_fused_int8(x, 5, 4, use_pallas=True)
+    assert q8.dtype == jnp.int8
+    # dequantized words sit within one grid step of the clipped input
+    deq = q8.astype(jnp.float32) / 16.0
+    err = jnp.abs(deq - jnp.clip(x, -8.0, 127 / 16.0))
+    assert float(jnp.max(err)) <= 1 / 16.0 + 1e-6
+    # deterministic per seed
+    np.testing.assert_array_equal(
+        np.asarray(q8),
+        np.asarray(ops.sr_quantize_fused_int8(x, 5, 4, use_pallas=True)))
+
+
+def test_fused_sr_fallback_same_grid():
+    """use_pallas=False oracle: same grid semantics, jax.random stream."""
+    x = jax.random.normal(KEY, (1024,)) * 3
+    q = ops.sr_quantize_fused(x, 9, 8, 4, use_pallas=False)
+    scaled = np.asarray(q) * 16
+    np.testing.assert_array_equal(scaled, np.round(scaled))
+
+
+# ---------------------------------------------------------------------------
+# Wiring: the hot paths actually call the kernels when use_pallas is set
+
+
+def _tiny_setup(**quant_overrides):
+    quant_overrides.setdefault("use_pallas", True)
+    qcfg = dataclasses.replace(QuantConfig(), **quant_overrides)
+    params = {"dense": {"w": jax.random.normal(KEY, (64, 64))},
+              "blocks": {"mlp": {"w": jax.random.normal(KEY, (2, 32, 32))}}}
+    return qcfg, params, controller.init_adapt_state(params, qcfg)
+
+
+def test_quantize_params_calls_fused_kernel(monkeypatch):
+    qcfg, params, st = _tiny_setup()
+    calls = []
+    orig = ops.sr_quantize_fused
+    monkeypatch.setattr(ops, "sr_quantize_fused",
+                        lambda *a, **k: calls.append(1) or orig(*a, **k))
+    controller.quantize_params(params, st, qcfg, key=KEY)
+    assert calls, "use_pallas set but the fused SR kernel was never called"
+
+
+def test_quantize_params_packed_calls_int8_kernel(monkeypatch):
+    qcfg, params, st = _tiny_setup()
+    calls = []
+    orig = ops.sr_quantize_fused_int8
+    monkeypatch.setattr(ops, "sr_quantize_fused_int8",
+                        lambda *a, **k: calls.append(1) or orig(*a, **k))
+    qp = controller.quantize_params_packed(params, st, qcfg, key=KEY)
+    assert calls and qp["dense"]["w"]["q8"].dtype == jnp.int8
+
+
+def test_precision_switch_calls_ladder_kernel(monkeypatch):
+    qcfg, params, st = _tiny_setup(lb_lwr=2, lb_upr=4)
+    calls = []
+    orig = ops.edf_ladder_hists
+    monkeypatch.setattr(ops, "edf_ladder_hists",
+                        lambda *a, **k: calls.append(1) or orig(*a, **k))
+    g = jax.tree.map(lambda p: jnp.ones_like(p) * 0.01, params)
+    st = controller.accumulate(st, g, jnp.float32(1.0))
+    st = controller.accumulate(st, g, jnp.float32(0.9))
+    controller.precision_switch(st, params, qcfg)
+    assert calls, "use_pallas set but PushDown never hit the ladder kernel"
+
+
+def test_precision_switch_pallas_xla_parity():
+    """The fused switch must reproduce the XLA decision exactly — the
+    controller tests' ⟨WL,FL⟩ grid semantics are load-bearing."""
+    qcfg, params, st = _tiny_setup(lb_lwr=2, lb_upr=4)
+    g = jax.tree.map(lambda p: jnp.ones_like(p) * 0.01, params)
+    st = controller.accumulate(st, g, jnp.float32(1.0))
+    st = controller.accumulate(st, g, jnp.float32(0.9))
+    got = controller.precision_switch(st, params, qcfg)
+    want = controller.precision_switch(
+        st, params, dataclasses.replace(qcfg, use_pallas=False))
+    for path in got["tensors"]:
+        for f in ("wl", "fl", "lb", "res"):
+            np.testing.assert_array_equal(
+                np.asarray(got["tensors"][path][f]),
+                np.asarray(want["tensors"][path][f]), err_msg=f"{path}/{f}")
+
+
+def test_quantize_params_sharded_leaves_skip_fused_kernel(monkeypatch):
+    """pallas_call has no SPMD partitioning rule — a sharded leaf through
+    the fused kernel would be silently replicated (all-gathering the f32
+    master). Sharded leaves must stay on the noise+constraint XLA path."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    qcfg, params, st = _tiny_setup()
+    mesh = Mesh(jax.devices()[:1], ("data",))
+    shardings = jax.tree.map(
+        lambda leaf: NamedSharding(mesh, P(*([None] * leaf.ndim))), params)
+    calls = []
+    monkeypatch.setattr(ops, "sr_quantize_fused",
+                        lambda *a, **k: calls.append(1))
+    monkeypatch.setattr(ops, "sr_quantize_fused_int8",
+                        lambda *a, **k: calls.append(1))
+    controller.quantize_params(params, st, qcfg, key=KEY,
+                               shardings=shardings)
+    controller.quantize_params_packed(params, st, qcfg, key=KEY,
+                                      shardings=shardings)
+    assert not calls, "fused kernel engaged on a sharded leaf"
+
+
+def test_edf_ladder_rejects_int32_overflow():
+    from repro.kernels import edf_ladder
+    with pytest.raises(ValueError, match="overflow int32"):
+        jax.eval_shape(
+            lambda w, f, r: edf_ladder.edf_ladder_hists(
+                w, f, r, wl_ladder=pushdown.WL_LADDER, r_upr=150),
+            jax.ShapeDtypeStruct((2 ** 31,), jnp.float32),
+            jax.ShapeDtypeStruct((18,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def test_quantize_params_deterministic_and_on_grid():
+    qcfg, params, st = _tiny_setup()
+    q1 = controller.quantize_params(params, st, qcfg, key=KEY)
+    q2 = controller.quantize_params(params, st, qcfg, key=KEY)
+    for a, b in zip(jax.tree.leaves(q1), jax.tree.leaves(q2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    s = np.asarray(q1["dense"]["w"]) * 16          # ⟨8,4⟩ grid
+    np.testing.assert_array_equal(s, np.round(s))
+
+
+# ---------------------------------------------------------------------------
+# Structural guarantees (the perf claims, checkable on the jaxpr)
+
+
+def test_fused_quantize_jaxpr_has_no_materialized_noise():
+    """The whole point of the in-kernel PRNG: no param-sized RNG output in
+    the traced program — the U[0,1) tensor must not exist. Scoped to
+    scalar-⟨WL,FL⟩ tensors; per-layer-stacked leaves still take the XLA
+    path (in-kernel stacked support is a ROADMAP follow-on)."""
+    qcfg = dataclasses.replace(QuantConfig(), use_pallas=True)
+    params = {"dense": {"w": jax.random.normal(KEY, (64, 64))},
+              "head": jax.random.normal(KEY, (64, 128))}
+    st = controller.init_adapt_state(params, qcfg)
+    jaxpr = jax.make_jaxpr(
+        lambda p, k: controller.quantize_params(p, st, qcfg, key=k)
+    )(params, KEY).jaxpr
+    min_param = min(leaf.size for leaf in jax.tree.leaves(params))
+    offenders = jaxpr_tools.rng_eqns_of_size(jaxpr, min_param)
+    assert not offenders, [str(e) for e in offenders]
+
+
+def test_baseline_quantize_jaxpr_does_materialize_noise():
+    """Sanity for the test above: the XLA path DOES materialize noise, so
+    the check is actually discriminating."""
+    qcfg, params, st = _tiny_setup(use_pallas=False)
+    jaxpr = jax.make_jaxpr(
+        lambda p, k: controller.quantize_params(p, st, qcfg, key=k)
+    )(params, KEY).jaxpr
+    min_param = min(leaf.size for leaf in jax.tree.leaves(params))
+    assert jaxpr_tools.rng_eqns_of_size(jaxpr, min_param)
+
+
+def test_fused_push_down_jaxpr_scatter_free():
+    w = jax.random.normal(KEY, (8192,))
+    fused = jax.make_jaxpr(lambda v: pushdown.push_down(
+        v, jnp.int32(100), r_upr=150, eps_kl=1e-2, use_pallas=True))(w).jaxpr
+    assert jaxpr_tools.count_primitives(fused, "scatter") == 0, \
+        "fused PushDown still contains scatter histograms"
+    baseline = jax.make_jaxpr(lambda v: pushdown.push_down(
+        v, jnp.int32(100), r_upr=150, eps_kl=1e-2))(w).jaxpr
+    assert jaxpr_tools.count_primitives(baseline, "scatter") > 0
+
+
+def test_fused_switch_jaxpr_scatter_free():
+    qcfg, params, st = _tiny_setup(lb_lwr=2, lb_upr=4)
+    g = jax.tree.map(lambda p: jnp.ones_like(p) * 0.01, params)
+    st = controller.accumulate(st, g, jnp.float32(1.0))
+    jaxpr = jax.make_jaxpr(
+        lambda s, p: controller.precision_switch(s, p, qcfg))(st, params).jaxpr
+    assert jaxpr_tools.count_primitives(jaxpr, "scatter-add") == 0
