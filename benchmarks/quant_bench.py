@@ -1,10 +1,19 @@
 """Microbenchmark: the precision-machinery fast path.
 
-Two hot spots, each measured XLA-reference vs fused-Pallas:
+Hot spots, each measured XLA-reference vs fused-Pallas:
 
   * ``quantize`` — the per-step quantize of every weight tensor (alg. 1).
     Baseline: jax.random noise materialized in HBM + 5-op XLA quantize.
     Fused: ``sr_quantize_fused`` — noise drawn in-kernel, one pass.
+  * ``quantize_stacked`` — the per-layer-stacked regime ("blocks" leaves,
+    heterogeneous (L,)-vector ⟨WL,FL⟩). Baseline: broadcast-⟨WL,FL⟩ XLA
+    quantize with materialized noise (the pre-PR-2 fallback this path
+    replaced). Fused: one ``sr_quantize_fused_stacked`` launch.
+  * ``quantize_sharded`` — the shard_map-wrapped kernel on a real mesh
+    (recorded only when >1 device is visible, e.g. under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``). Baseline:
+    noise + sharding-constraint XLA path. Fused: per-shard folded seeds,
+    zero collectives (asserted on the compiled HLO).
   * ``switch`` — PushDown's EDF ladder (alg. 3). Baseline: 18 vmapped
     quantize probes + 36 scatter-add histograms. Fused: one
     ``edf_ladder_hists`` launch + KL/argmin epilogue.
@@ -37,6 +46,8 @@ from repro.kernels import ops
 
 SIZES = [(512, 512), (1024, 2048), (2048, 4096)]
 SIZES_QUICK = [(256, 256), (512, 512), (512, 1024)]
+STACKED_SIZES = [(4, 512, 512), (12, 512, 1024)]
+STACKED_SIZES_QUICK = [(4, 128, 256), (8, 256, 256)]
 
 
 def _time(fn, reps: int = 5) -> float:
@@ -51,12 +62,12 @@ def _time(fn, reps: int = 5) -> float:
 # jaxpr structure readers (shared walker: repro.jaxpr_tools)
 
 
-def _quantize_structure(n: int) -> dict:
-    """Param-sized HBM operands of the fused kernel call + noise audit."""
-    x = jnp.zeros((n,), jnp.float32)
-    jaxpr = jax.make_jaxpr(
-        lambda v, s: ops.sr_quantize_fused(v, s, 8, 4, use_pallas=True)
-    )(x, jnp.int32(0)).jaxpr
+def _fused_structure(fn, x, *args, min_size: int | None = None) -> dict:
+    """Param-sized HBM operands of the fused kernel call + noise audit.
+    ``min_size`` overrides the "param-sized" threshold (the shard_map-
+    wrapped kernel sees per-shard blocks, not the global tensor)."""
+    n = min_size if min_size is not None else x.size
+    jaxpr = jax.make_jaxpr(fn)(x, *args).jaxpr
     transfers = 0
     for e in jaxpr_tools.iter_eqns(jaxpr):
         if e.primitive.name == "pallas_call":
@@ -65,6 +76,12 @@ def _quantize_structure(n: int) -> dict:
     return {"noise_materialized":
             bool(jaxpr_tools.rng_eqns_of_size(jaxpr, n)),
             "kernel_param_sized_hbm_transfers": transfers}
+
+
+def _quantize_structure(n: int) -> dict:
+    return _fused_structure(
+        lambda v, s: ops.sr_quantize_fused(v, s, 8, 4, use_pallas=True),
+        jnp.zeros((n,), jnp.float32), jnp.int32(0))
 
 
 def _switch_structure(n: int) -> dict:
@@ -113,6 +130,98 @@ def bench_quantize(sizes, reps: int) -> list:
     return rows
 
 
+def bench_quantize_stacked(sizes, reps: int) -> list:
+    """The per-layer-stacked regime: heterogeneous (L,)-vector ⟨WL,FL⟩.
+    The XLA baseline is exactly the pre-PR-2 fallback (broadcast precision
+    + materialized noise); the fused path is one stacked-kernel launch."""
+    rows = []
+    for shape in sizes:
+        L = shape[0]
+        x = jax.random.normal(jax.random.PRNGKey(3), shape, jnp.float32)
+        key = jax.random.PRNGKey(4)
+        wl = jnp.asarray(4 + (jnp.arange(L) % 12), jnp.int32)   # WL 4..15
+        fl = jnp.asarray(2 + (jnp.arange(L) % 9), jnp.int32)
+        bshape = (L,) + (1,) * (len(shape) - 1)
+
+        @jax.jit
+        def xla_path(v, k, wl=wl.reshape(bshape), fl=fl.reshape(bshape)):
+            u = jax.random.uniform(k, v.shape, jnp.float32)
+            return fxp.quantize(v, wl, fl, u=u)
+
+        @jax.jit
+        def fused_path(v, s, wl=wl, fl=fl):
+            return ops.sr_quantize_fused(v, s, wl, fl, use_pallas=True)
+
+        t_xla = _time(lambda: xla_path(x, key), reps=reps)
+        t_fused = _time(lambda: fused_path(x, jnp.int32(7)), reps=reps)
+        rows.append({
+            "shape": list(shape),
+            "layers": L,
+            "elements": int(x.size),
+            "xla_ms": t_xla * 1e3,
+            "fused_pallas_ms": t_fused * 1e3,
+            **_fused_structure(
+                lambda v, s: ops.sr_quantize_fused(v, s, wl, fl,
+                                                   use_pallas=True),
+                x, jnp.int32(0)),
+        })
+        print(f"  stacked  {shape}: xla {t_xla * 1e3:8.2f} ms | "
+              f"fused {t_fused * 1e3:8.2f} ms")
+    return rows
+
+
+def bench_quantize_sharded(reps: int) -> dict:
+    """The shard_map-wrapped fused kernel on a real mesh vs the XLA
+    noise+constraint path. Needs >1 visible device (CPU: run under
+    XLA_FLAGS=--xla_force_host_platform_device_count=N)."""
+    ndev = jax.device_count()
+    if ndev < 2:
+        print("  sharded: skipped (1 device)")
+        return {"skipped": "needs >1 device "
+                           "(XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=N)"}
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    mesh = Mesh(np.array(jax.devices()).reshape(ndev), ("data",))
+    sh = NamedSharding(mesh, P("data", None))
+    shape = (128 * ndev, 1024)
+    x = jax.device_put(
+        jax.random.normal(jax.random.PRNGKey(5), shape, jnp.float32), sh)
+    key = jax.random.PRNGKey(6)
+
+    @jax.jit
+    def xla_path(v, k):
+        u = jax.random.uniform(k, v.shape, jnp.float32)
+        u = jax.lax.with_sharding_constraint(u, sh)
+        return jax.lax.with_sharding_constraint(
+            fxp.quantize(v, jnp.int32(8), jnp.int32(4), u=u), sh)
+
+    @jax.jit
+    def fused_path(v, s):
+        return ops.sr_quantize_fused(v, s, 8, 4, use_pallas=True,
+                                     sharding=sh)
+
+    t_xla = _time(lambda: xla_path(x, key), reps=reps)
+    t_fused = _time(lambda: fused_path(x, jnp.int32(9)), reps=reps)
+    hlo = fused_path.lower(x, jnp.int32(9)).compile().as_text()
+    row = {
+        "devices": ndev,
+        "shape": list(shape),
+        "elements": int(x.size),
+        "xla_ms": t_xla * 1e3,
+        "fused_pallas_ms": t_fused * 1e3,
+        "fused_hlo_all_gather_free": "all-gather" not in hlo,
+        **_fused_structure(
+            lambda v, s: ops.sr_quantize_fused(v, s, 8, 4, use_pallas=True,
+                                               sharding=sh),
+            x, jnp.int32(0), min_size=int(x.size) // ndev),
+    }
+    print(f"  sharded  {shape} x{ndev}dev: xla {t_xla * 1e3:8.2f} ms | "
+          f"fused {t_fused * 1e3:8.2f} ms | "
+          f"all-gather-free={row['fused_hlo_all_gather_free']}")
+    return row
+
+
 def bench_switch(reps: int, sample: int = 65536) -> dict:
     w = jax.random.normal(jax.random.PRNGKey(2), (sample,), jnp.float32)
 
@@ -144,11 +253,14 @@ def run(quick: bool = False, out: str = "BENCH_quant.json") -> dict:
         print(f"  [note] backend={backend}: Pallas runs in interpret mode; "
               "wall times are not TPU-indicative (structure checks are).")
     sizes = SIZES_QUICK if quick else SIZES
+    stacked_sizes = STACKED_SIZES_QUICK if quick else STACKED_SIZES
     reps = 3 if quick else 5
     result = {
         "backend": backend,
         "interpret_mode": backend != "tpu",
         "quantize": bench_quantize(sizes, reps),
+        "quantize_stacked": bench_quantize_stacked(stacked_sizes, reps),
+        "quantize_sharded": bench_quantize_sharded(reps),
         "switch": bench_switch(reps, sample=16384 if quick else 65536),
     }
     with open(out, "w") as f:

@@ -126,8 +126,11 @@ class QuantConfig:
     # fused_prng draws the stochastic-rounding noise INSIDE the quantize
     # kernel (hardware PRNG on TPU, counter-hash under interpret), so the
     # param-sized U[0,1) tensor never exists in HBM: 2 HBM transfers per
-    # tensor instead of ~4. Only consulted when use_pallas is set; per-layer
-    # -stacked ⟨WL,FL⟩ leaves fall back to the XLA path (ROADMAP follow-on).
+    # tensor instead of ~4. Only consulted when use_pallas is set. All
+    # three leaf regimes are served (controller._use_fused_prng): scalar
+    # ⟨WL,FL⟩, per-layer-stacked (L,)-vector precision (one stacked-kernel
+    # launch per "blocks" leaf), and evenly-sharded leaves (shard_map-
+    # wrapped kernel with per-shard folded seeds, zero collectives).
     # Noise streams are deterministic per step key but differ from the
     # jax.random stream the XLA path uses — same distribution, not same bits.
     fused_prng: bool = True

@@ -32,7 +32,9 @@ from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding
 
+from repro import sharding as shd
 from repro.config import QuantConfig
 from repro.core import fixed_point as fxp
 from repro.core import pushdown, pushup
@@ -239,15 +241,33 @@ def _leaf_seed(key: Array, path: str) -> Array:
                               jnp.int32)
 
 
-def _use_fused_prng(qcfg: QuantConfig, key, wl: Array, sharded: bool) -> bool:
-    """The in-kernel-PRNG kernel serves scalar-⟨WL,FL⟩ leaves under SR.
-    Two classes stay on the XLA path (ROADMAP follow-ons): per-layer-stacked
-    precision, and leaves with an explicit sharding — pallas_call has no
-    SPMD partitioning rule, so GSPMD would REPLICATE the kernel (all-gather
-    the f32 master), exactly the regression the noise-constraint machinery
-    exists to prevent; the fused kernel needs a shard_map wrapper first."""
-    return (qcfg.use_pallas and qcfg.fused_prng and qcfg.stochastic_rounding
-            and key is not None and not wl.shape and not sharded)
+def _use_fused_prng(qcfg: QuantConfig, key, wl: Array, leaf: Array,
+                    sharding=None) -> bool:
+    """True when ``leaf`` can take the 2-transfer in-kernel-PRNG quantize.
+    All three dispatch regimes are served by ``kernels.ops``: scalar-⟨WL,FL⟩
+    leaves hit ``sr_quantize_fused`` directly; per-layer-stacked leaves
+    (wl of shape (L,)) hit the stacked kernel (leading per-layer grid dim,
+    SMEM precision vector); explicitly-sharded leaves are wrapped in
+    ``sharding.shard_map`` with per-shard folded seeds (pallas_call has no
+    SPMD partitioning rule, so without the wrapper GSPMD would REPLICATE
+    the kernel and all-gather the f32 master). Remaining exclusions:
+
+    * round-to-nearest mode (no step key / stochastic_rounding off) — the
+      fused kernel is an SR kernel; RTN stays on the deterministic XLA path;
+    * placements that are not a NamedSharding (no mesh/spec to map);
+    * sharded leaves whose sharded dims don't divide evenly over their mesh
+      axes — shard_map needs equal blocks, so those keep the XLA
+      noise+constraint path."""
+    if not (qcfg.use_pallas and qcfg.fused_prng and qcfg.stochastic_rounding
+            and key is not None):
+        return False
+    if wl.ndim > 1 or (wl.ndim == 1 and wl.shape[0] != leaf.shape[0]):
+        return False
+    if sharding is None:
+        return True
+    if not isinstance(sharding, NamedSharding):
+        return False
+    return shd.shard_grid(leaf.shape, sharding.spec, sharding.mesh) is not None
 
 
 def quantize_params(params: PyTree, state: Dict[str, Any], qcfg: QuantConfig,
@@ -258,14 +278,15 @@ def quantize_params(params: PyTree, state: Dict[str, Any], qcfg: QuantConfig,
     ``dtype``.
 
     ``shardings``: optional NamedSharding tree (same structure as params).
-    The SR noise is constrained to each tensor's sharding — without this
-    GSPMD resolves (sharded master × replicated noise) by ALL-GATHERING the
-    f32 master before quantizing (measured: the entire 5.6 TiB/step arctic
-    gather volume ran in f32 regardless of container dtype; §Perf). With
-    ``use_pallas`` + ``fused_prng``, UNSHARDED leaves skip the noise tensor
-    entirely (drawn inside the kernel — one fewer param-sized HBM round
-    trip); sharded leaves keep the noise+constraint path, since pallas_call
-    has no SPMD partitioning rule and would be replicated by GSPMD.
+    On the XLA path the SR noise is constrained to each tensor's sharding —
+    without this GSPMD resolves (sharded master × replicated noise) by
+    ALL-GATHERING the f32 master before quantizing (measured: the entire
+    5.6 TiB/step arctic gather volume ran in f32 regardless of container
+    dtype; §Perf). With ``use_pallas`` + ``fused_prng``, eligible leaves
+    (see ``_use_fused_prng``) skip the noise tensor entirely — drawn inside
+    the kernel, one fewer param-sized HBM round trip — including per-layer-
+    stacked leaves (one stacked-kernel launch per leaf) and evenly-sharded
+    leaves (shard_map-wrapped kernel, per-shard seeds, zero collectives).
 
     ``dtype=jnp.int8`` emits the native-int8 path: round(w·2^FL) lives as an
     int8 tensor in the graph (exact for WL≤8), dequantized to bf16 at the
@@ -286,18 +307,22 @@ def quantize_params(params: PyTree, state: Dict[str, Any], qcfg: QuantConfig,
             return leaf.astype(out_dtype)
         ts = tensors[p]
         wl, fl = ts["wl"], ts["fl"]
-        if _use_fused_prng(qcfg, key, wl,
-                           flat_sh is not None and p in flat_sh):
+        sh = flat_sh.get(p) if flat_sh is not None else None
+        if _use_fused_prng(qcfg, key, wl, leaf, sh):
             # single-pass Pallas kernel, noise drawn in-register: the only
             # param-sized HBM traffic is leaf-in / quantized-out.
             seed = _leaf_seed(key, p)
             if int8:
                 q8 = kops.sr_quantize_fused_int8(leaf, seed, fl,
-                                                 use_pallas=True)
-                return (q8.astype(jnp.bfloat16)
-                        * jnp.exp2(-jnp.asarray(fl, jnp.bfloat16)))
-            return kops.sr_quantize_fused(leaf, seed, wl, fl,
-                                          use_pallas=True).astype(out_dtype)
+                                                 use_pallas=True, sharding=sh)
+                # exact 2^-FL (bf16-representable): bf16 exp2 is off by up
+                # to ~3% and NOT a power of two — fixed_point.pow2i
+                sc = fxp.pow2i(-fl).astype(jnp.bfloat16)
+                if fl.shape:
+                    sc = sc.reshape(fl.shape + (1,) * (leaf.ndim - 1))
+                return q8.astype(jnp.bfloat16) * sc
+            return kops.sr_quantize_fused(leaf, seed, wl, fl, use_pallas=True,
+                                          sharding=sh).astype(out_dtype)
         if wl.shape:  # stacked: broadcast (L,) -> (L,1,...)
             bshape = wl.shape + (1,) * (leaf.ndim - 1)
             wl = wl.reshape(bshape)
@@ -308,12 +333,11 @@ def quantize_params(params: PyTree, state: Dict[str, Any], qcfg: QuantConfig,
             if flat_sh is not None and p in flat_sh:
                 u = jax.lax.with_sharding_constraint(u, flat_sh[p])
         if int8:
-            scale = jnp.exp2(jnp.asarray(fl, jnp.float32))
+            scale = fxp.pow2i(fl)
             x = leaf.astype(jnp.float32) * scale
             q = fxp.stochastic_round(x, u) if u is not None else jnp.round(x)
             q = jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
-            return (q.astype(jnp.bfloat16)
-                    * jnp.exp2(-jnp.asarray(fl, jnp.bfloat16)))
+            return q.astype(jnp.bfloat16) * fxp.pow2i(-fl).astype(jnp.bfloat16)
         return fxp.quantize(leaf, wl, fl, u=u).astype(out_dtype)
 
     return jax.tree_util.tree_map_with_path(visit, params)
@@ -349,16 +373,21 @@ def quantize_params_packed(params: PyTree, state: Dict[str, Any],
             return leaf.astype(jnp.bfloat16)
         ts = tensors[p]
         fl = ts["fl"]
-        if _use_fused_prng(qcfg, key, fl,
-                           flat_sh is not None and p in flat_sh):
+        sh = flat_sh.get(p) if flat_sh is not None else None
+        if _use_fused_prng(qcfg, key, fl, leaf, sh):
             # in-kernel PRNG: the int8 words are produced in one pass with
             # no noise operand — the packed wire payload never sees f32.
-            # (Only unsharded leaves reach here, so no constraints needed.)
+            # Sharded leaves come back from the shard_map wrapper already
+            # laid out on the mesh; only wref needs the constraint.
             q8 = kops.sr_quantize_fused_int8(leaf, _leaf_seed(key, p), fl,
-                                             use_pallas=True)
-            sc = jnp.exp2(-jnp.asarray(fl, jnp.bfloat16))
-            return {"q8": q8, "sc": sc,
-                    "wref": jnp.zeros(leaf.shape, jnp.bfloat16)}
+                                             use_pallas=True, sharding=sh)
+            sc = fxp.pow2i(-fl).astype(jnp.bfloat16)
+            if fl.shape:
+                sc = sc.reshape(fl.shape + (1,) * (leaf.ndim - 1))
+            wref = jnp.zeros(leaf.shape, jnp.bfloat16)
+            if sh is not None:
+                wref = jax.lax.with_sharding_constraint(wref, sh)
+            return {"q8": q8, "sc": sc, "wref": wref}
         if fl.shape:
             fl = fl.reshape(fl.shape + (1,) * (leaf.ndim - 1))
         u = None
@@ -366,11 +395,11 @@ def quantize_params_packed(params: PyTree, state: Dict[str, Any],
             u = fxp.uniform_noise_like(_leaf_key(key, p), leaf)
             if flat_sh is not None and p in flat_sh:
                 u = jax.lax.with_sharding_constraint(u, flat_sh[p])
-        scale = jnp.exp2(jnp.asarray(fl, jnp.float32))
+        scale = fxp.pow2i(fl)
         x = leaf.astype(jnp.float32) * scale
         q = fxp.stochastic_round(x, u) if u is not None else jnp.round(x)
         q8 = jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
-        sc = jnp.exp2(-jnp.asarray(fl, jnp.bfloat16))
+        sc = fxp.pow2i(-fl).astype(jnp.bfloat16)
         wref = jnp.zeros(leaf.shape, jnp.bfloat16)
         if flat_sh is not None and p in flat_sh:
             q8 = jax.lax.with_sharding_constraint(q8, flat_sh[p])

@@ -23,10 +23,21 @@ Array = jax.Array
 MAX_WL = 32
 
 
+def pow2i(e: Array) -> Array:
+    """Exact 2^e (f32) for integer e, built from the exponent bits (clamped
+    to the normal range [-126, 127]). XLA CPU lowers ``exp2`` to
+    ``exp(e·ln2)``, which is off by an ulp for |e| ≳ 10 — enough to knock
+    the ⟨WL,FL⟩ grid off its exact powers of two (e.g. exp2(15) =
+    32767.984); every grid scale must go through this instead. The Pallas
+    kernels carry their own in-kernel mirror (``sr_quantize._pow2i``)."""
+    e = jnp.clip(jnp.asarray(e, jnp.int32), -126, 127)
+    return jax.lax.bitcast_convert_type((e + 127) << 23, jnp.float32)
+
+
 def fxp_bounds(wl: Array) -> tuple[Array, Array]:
-    """(qmin, qmax) integer bounds of a signed WL-bit word; f32 to allow WL>24."""
-    wl = jnp.asarray(wl, jnp.float32)
-    qmax = jnp.exp2(wl - 1.0) - 1.0
+    """(qmin, qmax) integer bounds of a signed WL-bit word (f32 container,
+    exact up to WL=32: 2^31 is representable)."""
+    qmax = pow2i(jnp.asarray(wl, jnp.int32) - 1) - 1.0
     return -qmax - 1.0, qmax
 
 
@@ -44,7 +55,7 @@ def quantize(w: Array, wl: Array, fl: Array, *, u: Array | None = None) -> Array
     WL/FL may be scalars or broadcastable arrays (e.g. per-scanned-layer (L,1,1)).
     """
     w = w.astype(jnp.float32)
-    scale = jnp.exp2(jnp.asarray(fl, jnp.float32))
+    scale = pow2i(fl)
     qmin, qmax = fxp_bounds(wl)
     x = w * scale
     if u is None:
@@ -61,7 +72,7 @@ def quantize_int8(w: Array, fl: Array, *, u: Array | None = None) -> tuple[Array
     Returns (q_int8, scale) with dequant = q * scale.
     """
     w = w.astype(jnp.float32)
-    scale = jnp.exp2(jnp.asarray(fl, jnp.float32))
+    scale = pow2i(fl)
     x = w * scale
     q = jnp.round(x) if u is None else stochastic_round(x, u.astype(jnp.float32))
     q = jnp.clip(q, -128.0, 127.0).astype(jnp.int8)

@@ -37,8 +37,9 @@ def quantize_block_fp(x: Array, wl: int, u: Array | None = None) -> Array:
     """Block-floating-point quantize with shared scale; float32 container."""
     if wl >= 32:
         return x.astype(jnp.float32)
+    from repro.core import fixed_point as fxp
     s = block_fp_scale(x, wl)
-    scale = jnp.exp2(s)
+    scale = fxp.pow2i(s)   # exact power of two (s is integer-valued)
     noise = (u - 0.5) if u is not None else 0.0
     q = jnp.floor(x.astype(jnp.float32) * scale + 0.5 + noise)
     q = jnp.clip(q, -(2.0 ** (wl - 1)), 2.0 ** (wl - 1) - 1.0)

@@ -43,3 +43,19 @@ def rng_eqns_of_size(jaxpr, min_size: int):
 
 def count_primitives(jaxpr, name_substr: str) -> int:
     return sum(name_substr in eqn.primitive.name for eqn in iter_eqns(jaxpr))
+
+
+# Gather-shaped collectives whose param-sized outputs would mean the f32
+# master (or its quantized copy) is being reassembled across the mesh —
+# exactly what the shard_map-wrapped quantize exists to prevent. psum/
+# pmean are deliberately absent: scalar reductions are fine.
+COLLECTIVE_PRIMS = ("all_gather", "all_to_all")
+
+
+def collective_eqns_of_size(jaxpr, min_size: int):
+    """Gather-type collective eqns producing an output of ≥ min_size
+    elements (descends into shard_map/pjit bodies via iter_eqns)."""
+    return [eqn for eqn in iter_eqns(jaxpr)
+            if any(p in eqn.primitive.name for p in COLLECTIVE_PRIMS)
+            and any(getattr(ov.aval, "size", 0) >= min_size
+                    for ov in eqn.outvars)]

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.sr_quantize import _pow2i
+
 Array = jax.Array
 
 LANE = 128
@@ -66,7 +68,7 @@ def _edf_ladder_kernel(scal_ref, meta_ref, fls_ref, x_ref, o_ref, acc_ref, *,
 
     acc_ref[0, :] += count(x)
     for t, wl in enumerate(wl_ladder):        # static unroll over the ladder
-        scale = jnp.exp2(fls_ref[0, t].astype(jnp.float32))
+        scale = _pow2i(fls_ref[0, t])   # exact: exp2 is off an ulp at FL≳10
         qmax = float(2.0 ** (wl - 1) - 1.0)
         q = jnp.clip(jnp.round(x * scale), -qmax - 1.0, qmax) / scale
         acc_ref[1 + t, :] += count(q)

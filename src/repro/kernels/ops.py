@@ -8,7 +8,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro import sharding as shd
 from repro.kernels import edf_ladder as _el
 from repro.kernels import flash_attention as _fa
 from repro.kernels import fxp_matmul as _fm
@@ -31,31 +33,130 @@ def sr_quantize(x: Array, u: Array, wl, fl, *, use_pallas: bool = False) -> Arra
     return ref.ref_sr_quantize(x, u, wl, fl)
 
 
-def sr_quantize_fused(x: Array, seed, wl, fl, *,
-                      use_pallas: bool = False) -> Array:
-    """SR quantize with in-kernel noise (no U[0,1) tensor in HBM). The
-    hardware PRNG is used on compiled TPU runs; interpret mode (CPU CI) uses
-    the kernel's portable counter-hash stream; the non-Pallas fallback draws
-    an explicit jax.random stream. All are deterministic per seed."""
+def _dim_spec(axes: tuple):
+    return None if not axes else (axes[0] if len(axes) == 1 else axes)
+
+
+def _fused_sharded(x: Array, seed: Array, extras, extra_lead, call,
+                   sharding) -> Array:
+    """shard_map-wrap ``call(x_loc, seed_loc, *extra_locs)`` over the leaf's
+    NamedSharding. pallas_call has no SPMD partitioning rule — under plain
+    GSPMD the kernel would be REPLICATED (all-gathering the f32 master), so
+    the wrapper goes manual over every mesh axis the spec names and derives
+    a per-shard seed by folding the linear shard index
+    (``sr_quantize.fold_shard_seed``): the global stream is a pure function
+    of ⟨seed, mesh layout⟩, bit-reproducible on any host
+    (``ref.ref_sr_quantize_fused_sharded_words``). ``extra_lead[i]`` marks
+    extras[i] as an (L,)-vector following the leaf's leading dim (stacked
+    ⟨WL,FL⟩); other extras are replicated scalars. Callers must have
+    checked even divisibility (``sharding.shard_grid``)."""
+    mesh = sharding.mesh
+    per_dim = shd.spec_dim_axes(sharding.spec, x.ndim)
+    folded = tuple(a for axes in per_dim for a in axes)
+    if not folded:                    # fully replicated: plain kernel call
+        return call(x, seed, *extras)
+    xspec = P(*[_dim_spec(a) for a in per_dim])
+    lead = P(_dim_spec(per_dim[0]))
+
+    def body(x_loc, seed_, *extra_locs):
+        # Fold only the axes the spec names: devices along the remaining
+        # (replication) axes hold identical blocks and must compute
+        # identical words.
+        idx = jnp.int32(0)
+        for a in folded:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return call(x_loc, _sq.fold_shard_seed(seed_, idx), *extra_locs)
+
+    in_specs = (xspec, P()) + tuple(lead if is_lead else P()
+                                    for is_lead in extra_lead)
+    # Manual over the WHOLE mesh (partial-manual shard_map only lowers
+    # under jit on the pinned jaxlib; full-manual also runs eagerly) —
+    # unnamed axes simply see replicated blocks.
+    return shd.shard_map(body, mesh, axis_names=set(mesh.axis_names),
+                         in_specs=in_specs, out_specs=xspec)(x, seed, *extras)
+
+
+def sr_quantize_fused(x: Array, seed, wl, fl, *, use_pallas: bool = False,
+                      sharding=None) -> Array:
+    """SR quantize with in-kernel noise (no U[0,1) tensor in HBM), serving
+    all three dispatch regimes of the 2-transfer path:
+
+    * scalar ⟨wl, fl⟩           → ``sr_quantize_fused`` directly;
+    * (L,)-vector ⟨wl, fl⟩      → the per-layer-stacked kernel (leading
+      grid dim + SMEM precision vector, one launch for the whole stack);
+    * ``sharding`` a NamedSharding with mesh axes in its spec → the kernel
+      (stacked or not) wrapped in ``sharding.shard_map`` with per-shard
+      folded seeds, so FSDP/TP leaves keep the 2-transfer path with zero
+      collectives.
+
+    The hardware PRNG is used on compiled TPU runs; interpret mode (CPU
+    CI) uses the portable counter-hash stream; the non-Pallas fallback
+    draws an explicit jax.random stream. All are deterministic per seed."""
+    seed = jnp.asarray(seed, jnp.int32)
+    wl = jnp.asarray(wl, jnp.int32)
+    fl = jnp.asarray(fl, jnp.int32)
+    stacked = bool(wl.ndim)
     if use_pallas:
         on_tpu = _on_tpu()
-        return _sq.sr_quantize_fused(x, jnp.asarray(seed, jnp.int32),
-                                     jnp.asarray(wl, jnp.int32),
-                                     jnp.asarray(fl, jnp.int32),
-                                     interpret=not on_tpu, hw_prng=on_tpu)
+
+        def call(xv, sv, wlv, flv):
+            if stacked:
+                return _sq.sr_quantize_fused_stacked(
+                    xv, sv, wlv, flv, interpret=not on_tpu, hw_prng=on_tpu)
+            return _sq.sr_quantize_fused(xv, sv, wlv, flv,
+                                         interpret=not on_tpu,
+                                         hw_prng=on_tpu)
+
+        if sharding is not None:
+            return _fused_sharded(x, seed, (wl, fl), (stacked, stacked),
+                                  call, sharding)
+        return call(x, seed, wl, fl)
+    if sharding is not None:
+        # The jax.random fallback can honor neither the per-shard seed
+        # contract nor the no-collective guarantee — refuse loudly rather
+        # than silently re-introducing the f32 all-gather.
+        raise ValueError("sr_quantize_fused: sharding= requires "
+                         "use_pallas=True (the XLA fallback would gather "
+                         "the master; use the noise+constraint path "
+                         "instead)")
+    if stacked:
+        b = (wl.shape[0],) + (1,) * (x.ndim - 1)
+        return ref.ref_sr_quantize_fused(x, seed, wl.reshape(b),
+                                         fl.reshape(b))
     return ref.ref_sr_quantize_fused(x, seed, wl, fl)
 
 
-def sr_quantize_fused_int8(x: Array, seed, fl, *,
-                           use_pallas: bool = False) -> Array:
+def sr_quantize_fused_int8(x: Array, seed, fl, *, use_pallas: bool = False,
+                           sharding=None) -> Array:
     """Int8-word flavor of :func:`sr_quantize_fused` for the native_int8 /
-    packed path: returns the int8 fixed-point words (dequant = q8·2^-FL)."""
+    packed path: returns the int8 fixed-point words (dequant = q8·2^-FL).
+    Same three dispatch regimes (scalar / stacked (L,)-vector FL /
+    shard_map-wrapped)."""
+    seed = jnp.asarray(seed, jnp.int32)
+    fl = jnp.asarray(fl, jnp.int32)
+    stacked = bool(fl.ndim)
     if use_pallas:
         on_tpu = _on_tpu()
-        return _sq.sr_quantize_fused_int8(x, jnp.asarray(seed, jnp.int32),
-                                          jnp.asarray(fl, jnp.int32),
-                                          interpret=not on_tpu,
-                                          hw_prng=on_tpu)
+
+        def call(xv, sv, flv):
+            if stacked:
+                return _sq.sr_quantize_fused_stacked_int8(
+                    xv, sv, flv, interpret=not on_tpu, hw_prng=on_tpu)
+            return _sq.sr_quantize_fused_int8(xv, sv, flv,
+                                              interpret=not on_tpu,
+                                              hw_prng=on_tpu)
+
+        if sharding is not None:
+            return _fused_sharded(x, seed, (fl,), (stacked,), call, sharding)
+        return call(x, seed, fl)
+    if sharding is not None:
+        raise ValueError("sr_quantize_fused_int8: sharding= requires "
+                         "use_pallas=True (the XLA fallback would gather "
+                         "the master; use the noise+constraint path "
+                         "instead)")
+    if stacked:
+        b = (fl.shape[0],) + (1,) * (x.ndim - 1)
+        return ref.ref_sr_quantize_fused_int8(x, seed, fl.reshape(b))
     return ref.ref_sr_quantize_fused_int8(x, seed, fl)
 
 

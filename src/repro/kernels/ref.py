@@ -11,11 +11,20 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
+def _pow2(e) -> Array:
+    """Exact 2^e (f32) for integer(-valued) e, via ldexp. Grid scales must
+    never go through a transcendental lowering — XLA CPU's exp2 (and
+    potentially pow) is off an ulp for |e| ≳ 10, which would knock the
+    oracles off the exact ⟨WL,FL⟩ grid the kernels (sr_quantize._pow2i)
+    guarantee."""
+    return jnp.ldexp(jnp.float32(1.0), jnp.asarray(e, jnp.int32))
+
+
 def ref_sr_quantize(x: Array, u: Array, wl: int, fl: int) -> Array:
     """Fixed-point ⟨WL,FL⟩ stochastic-round quantize (f32-container grid)."""
     xf = x.astype(jnp.float32)
-    scale = jnp.float32(2.0) ** fl
-    qmax = jnp.float32(2.0) ** (wl - 1) - 1.0
+    scale = _pow2(fl)
+    qmax = _pow2(wl - 1) - 1.0
     s = xf * scale
     f = jnp.floor(s)
     q = f + (u.astype(jnp.float32) < (s - f)).astype(jnp.float32)
@@ -41,6 +50,129 @@ def ref_sr_quantize_fused_int8(x: Array, seed: Array, fl: int) -> Array:
     return jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
 
 
+# ---------------------------------------------------------------------------
+# Bit-exact oracles of the fused kernels' PORTABLE noise stream.
+#
+# The fused kernels draw noise in-register. On compiled TPU that is the
+# hardware PRNG (not reproducible off-device); everywhere else — interpret
+# mode, i.e. CPU CI and any non-TPU backend — it is a murmur3-finalizer
+# counter hash over the global padded element index. That stream is a
+# CONTRACT: the functions below regenerate it in pure jnp so the
+# differential harness (tests/test_quantize_differential.py) can demand
+# word-for-word equality with the kernels, and the golden-stream test can
+# pin it against drift. Padding in the kernels' (rows, 512) layout only
+# appends elements at the end of each flat plane, so the live stream of an
+# unstacked tensor is simply hash(0..n-1) and layer l of a stacked tensor
+# starts at flat offset l·rows·512.
+
+FUSED_LANES = 512          # the fused kernels' padded row width (LANE * 4)
+
+
+def ref_fused_noise(seed, n: int, offset: int = 0) -> Array:
+    """U[0,1) words the fused kernels draw for flat padded elements
+    [offset, offset + n) under the portable counter-hash stream."""
+    h = (jnp.arange(n, dtype=jnp.uint32) + jnp.uint32(offset)
+         + jnp.asarray(seed, jnp.int32).astype(jnp.uint32)
+         * jnp.uint32(0x9E3779B9))
+    h ^= h >> 16
+    h = h * jnp.uint32(0x7FEB352D)
+    h ^= h >> 15
+    h = h * jnp.uint32(0x846CA68B)
+    h ^= h >> 16
+    return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def ref_fold_shard_seed(seed, idx) -> Array:
+    """Mirror of ``sr_quantize.fold_shard_seed`` (independent jnp
+    implementation): the per-shard seed the shard_map wrapper derives from
+    the linear shard index."""
+    s = (jnp.asarray(seed, jnp.int32).astype(jnp.uint32)
+         + jnp.asarray(idx, jnp.uint32) * jnp.uint32(0x9E3779B9))
+    s = s ^ (s >> 16)
+    s = s * jnp.uint32(0x7FEB352D)
+    s = s ^ (s >> 15)
+    return jax.lax.bitcast_convert_type(s, jnp.int32)
+
+
+def ref_sr_quantize_fused_words(x: Array, seed, wl, fl) -> Array:
+    """Bit-exact oracle of ``sr_quantize_fused`` under the portable stream
+    (vs :func:`ref_sr_quantize_fused`, which is only distributional)."""
+    u = ref_fused_noise(seed, x.size).reshape(x.shape)
+    return ref_sr_quantize(x, u, wl, fl)
+
+
+def ref_sr_quantize_fused_int8_words(x: Array, seed, fl) -> Array:
+    """Bit-exact oracle of ``sr_quantize_fused_int8``'s portable stream."""
+    u = ref_fused_noise(seed, x.size).reshape(x.shape)
+    xf = x.astype(jnp.float32) * _pow2(fl)
+    f = jnp.floor(xf)
+    q = f + (u < (xf - f)).astype(jnp.float32)
+    return jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
+
+
+def _stacked_offsets(x: Array):
+    n = x[0].size
+    rows = -(-n // FUSED_LANES)
+    return n, rows * FUSED_LANES
+
+
+def ref_sr_quantize_fused_stacked_words(x: Array, seed, wl, fl) -> Array:
+    """Bit-exact oracle of ``sr_quantize_fused_stacked``: slice l on the
+    ⟨wl[l], fl[l]⟩ grid, noise from flat offset l·rows·512 of the shared
+    stream."""
+    n, stride = _stacked_offsets(x)
+    outs = []
+    for l in range(x.shape[0]):
+        u = ref_fused_noise(seed, n, offset=l * stride)
+        outs.append(ref_sr_quantize(x[l].reshape(-1), u, wl[l],
+                                    fl[l]).reshape(x.shape[1:]))
+    return jnp.stack(outs)
+
+
+def ref_sr_quantize_fused_stacked_int8_words(x: Array, seed, fl) -> Array:
+    """Bit-exact oracle of ``sr_quantize_fused_stacked_int8``."""
+    n, stride = _stacked_offsets(x)
+    outs = []
+    for l in range(x.shape[0]):
+        u = ref_fused_noise(seed, n, offset=l * stride)
+        xf = x[l].reshape(-1).astype(jnp.float32) * _pow2(fl[l])
+        f = jnp.floor(xf)
+        q = f + (u < (xf - f)).astype(jnp.float32)
+        outs.append(jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
+                    .reshape(x.shape[1:]))
+    return jnp.stack(outs)
+
+
+def ref_sr_quantize_fused_sharded_words(x: Array, seed, wl, fl,
+                                        grid: tuple, *,
+                                        int8: bool = False) -> Array:
+    """Bit-exact oracle of the shard_map-wrapped fused quantize, assembled
+    on one device: ``grid[d]`` equal blocks per dim; block b (row-major
+    over ``grid``, matching the wrapper's flattened-axis fold order)
+    quantizes with seed ``ref_fold_shard_seed(seed, b)`` and its own local
+    padded-layout stream. wl/fl may be scalars or (L,) vectors (stacked
+    leaf — dim-0 blocks then carry the matching precision slice)."""
+    import itertools
+    blocks = [s // g for s, g in zip(x.shape, grid)]
+    stacked = bool(jnp.ndim(fl))
+    out = jnp.zeros(x.shape, jnp.int8 if int8 else x.dtype)
+    for lin, coords in enumerate(itertools.product(
+            *[range(g) for g in grid])):
+        sl = tuple(slice(c * b, (c + 1) * b)
+                   for c, b in zip(coords, blocks))
+        s = ref_fold_shard_seed(seed, lin)
+        blk = x[sl]
+        if int8:
+            q = (ref_sr_quantize_fused_stacked_int8_words(blk, s, fl[sl[0]])
+                 if stacked else ref_sr_quantize_fused_int8_words(blk, s, fl))
+        else:
+            q = (ref_sr_quantize_fused_stacked_words(blk, s, wl[sl[0]],
+                                                     fl[sl[0]])
+                 if stacked else ref_sr_quantize_fused_words(blk, s, wl, fl))
+        out = out.at[sl].set(q)
+    return out
+
+
 def ref_edf_ladder_hists(w: Array, fls: Array, r: Array, *, wl_ladder: tuple,
                          r_upr: int) -> Array:
     """Oracle for the fused EDF ladder: scatter-add histograms of the master
@@ -58,7 +190,7 @@ def ref_edf_ladder_hists(w: Array, fls: Array, r: Array, *, wl_ladder: tuple,
 
     rows = [hist(wf)]
     for t, wl in enumerate(wl_ladder):
-        scale = jnp.exp2(fls[t].astype(jnp.float32))
+        scale = _pow2(fls[t])
         qmax = jnp.float32(2.0 ** (wl - 1) - 1.0)
         q = jnp.clip(jnp.round(wf * scale), -qmax - 1.0, qmax) / scale
         rows.append(hist(q))

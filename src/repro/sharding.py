@@ -99,6 +99,32 @@ def shard_map(f, mesh: Mesh, *, axis_names, in_specs, out_specs,
                       check_rep=check, auto=auto)
 
 
+def spec_dim_axes(spec, ndim: int) -> Tuple[tuple, ...]:
+    """Per-dim tuples of mesh-axis names of a PartitionSpec, padded to
+    ``ndim`` dims (PartitionSpecs may be shorter than the rank; missing and
+    ``None`` entries mean replicated)."""
+    entries = tuple(spec) if spec is not None else ()
+    entries = entries[:ndim] + (None,) * (ndim - len(entries))
+    return tuple(() if e is None else ((e,) if isinstance(e, str)
+                                       else tuple(e)) for e in entries)
+
+
+def shard_grid(shape, spec, mesh: Mesh) -> Optional[Tuple[int, ...]]:
+    """Per-dim shard counts of an array of ``shape`` under (spec, mesh), or
+    None when a sharded dim does not divide evenly over its mesh axes —
+    shard_map needs equal blocks, so uneven leaves are ineligible for the
+    shard_map-wrapped kernels."""
+    grid = []
+    for d, axes in enumerate(spec_dim_axes(spec, len(shape))):
+        k = 1
+        for a in axes:
+            k *= mesh.shape[a]
+        if shape[d] % k:
+            return None
+        grid.append(k)
+    return tuple(grid)
+
+
 def strip_axes(rules: Dict[str, tuple], axes) -> Dict[str, tuple]:
     """Rules with the given mesh axes removed (e.g. inside a shard_map that
     is manual over 'pod', constraints may only name auto axes)."""

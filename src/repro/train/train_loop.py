@@ -105,11 +105,13 @@ def make_train_step(cfg: Config, qparam_shardings=None) -> Callable:
     f32 master instead of the small quantized container (measured on
     granite-8b: the 96 GiB/step gather didn't shrink under a bf16 container
     until this constraint pinned it; EXPERIMENTS.md §Perf). Under
-    ``quant.use_pallas`` + ``quant.fused_prng``, leaves WITHOUT a sharding
-    entry draw the SR noise inside the quantize kernel (no noise tensor,
-    one fewer param-sized HBM round trip); sharded leaves keep the
-    noise+constraint path because pallas_call cannot be partitioned by
-    GSPMD (controller._use_fused_prng)."""
+    ``quant.use_pallas`` + ``quant.fused_prng``, eligible leaves —
+    unsharded, per-layer-stacked, AND evenly-sharded (the kernel wraps
+    itself in sharding.shard_map with per-shard seeds, since pallas_call
+    cannot be partitioned by GSPMD) — draw the SR noise inside the
+    quantize kernel: no noise tensor, one fewer param-sized HBM round
+    trip, zero collectives. Only unevenly-sharded or RTN-mode leaves keep
+    the noise+constraint XLA path (controller._use_fused_prng)."""
     qcfg, ocfg, tcfg = cfg.quant, cfg.optimizer, cfg.train
 
     def train_step(state: Dict[str, Any], batch: Dict[str, Array]

@@ -210,25 +210,33 @@ def test_precision_switch_pallas_xla_parity():
                 np.asarray(want["tensors"][path][f]), err_msg=f"{path}/{f}")
 
 
-def test_quantize_params_sharded_leaves_skip_fused_kernel(monkeypatch):
-    """pallas_call has no SPMD partitioning rule — a sharded leaf through
-    the fused kernel would be silently replicated (all-gathering the f32
-    master). Sharded leaves must stay on the noise+constraint XLA path."""
+def test_quantize_params_sharded_leaves_use_fused_kernel(monkeypatch):
+    """Since PR 2 sharded leaves keep the 2-transfer path: the fused
+    kernel is handed the leaf's NamedSharding and wraps itself in
+    sharding.shard_map (per-shard folded seeds) instead of falling back
+    to the XLA noise+constraint path. Multi-device parity lives in
+    tests/test_quantize_sharded.py; here we pin the dispatch."""
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
     qcfg, params, st = _tiny_setup()
     mesh = Mesh(jax.devices()[:1], ("data",))
     shardings = jax.tree.map(
-        lambda leaf: NamedSharding(mesh, P(*([None] * leaf.ndim))), params)
+        lambda leaf: NamedSharding(mesh, P("data", *([None] * (leaf.ndim - 1)))),
+        params)
     calls = []
-    monkeypatch.setattr(ops, "sr_quantize_fused",
-                        lambda *a, **k: calls.append(1))
-    monkeypatch.setattr(ops, "sr_quantize_fused_int8",
-                        lambda *a, **k: calls.append(1))
+    orig = ops.sr_quantize_fused
+    orig8 = ops.sr_quantize_fused_int8
+    monkeypatch.setattr(
+        ops, "sr_quantize_fused",
+        lambda *a, **k: calls.append(k.get("sharding")) or orig(*a, **k))
+    monkeypatch.setattr(
+        ops, "sr_quantize_fused_int8",
+        lambda *a, **k: calls.append(k.get("sharding")) or orig8(*a, **k))
     controller.quantize_params(params, st, qcfg, key=KEY,
                                shardings=shardings)
     controller.quantize_params_packed(params, st, qcfg, key=KEY,
                                       shardings=shardings)
-    assert not calls, "fused kernel engaged on a sharded leaf"
+    assert calls and all(isinstance(s, NamedSharding) for s in calls), \
+        "sharded leaves no longer reach the fused kernel with their sharding"
 
 
 def test_edf_ladder_rejects_int32_overflow():
@@ -258,12 +266,13 @@ def test_quantize_params_deterministic_and_on_grid():
 
 def test_fused_quantize_jaxpr_has_no_materialized_noise():
     """The whole point of the in-kernel PRNG: no param-sized RNG output in
-    the traced program — the U[0,1) tensor must not exist. Scoped to
-    scalar-⟨WL,FL⟩ tensors; per-layer-stacked leaves still take the XLA
-    path (in-kernel stacked support is a ROADMAP follow-on)."""
+    the traced program — the U[0,1) tensor must not exist. Covers scalar-
+    ⟨WL,FL⟩ AND per-layer-stacked leaves (since PR 2 the stacked kernel
+    serves "blocks" stacks in the same launch discipline)."""
     qcfg = dataclasses.replace(QuantConfig(), use_pallas=True)
     params = {"dense": {"w": jax.random.normal(KEY, (64, 64))},
-              "head": jax.random.normal(KEY, (64, 128))}
+              "head": jax.random.normal(KEY, (64, 128)),
+              "blocks": {"mlp": {"w": jax.random.normal(KEY, (2, 48, 48))}}}
     st = controller.init_adapt_state(params, qcfg)
     jaxpr = jax.make_jaxpr(
         lambda p, k: controller.quantize_params(p, st, qcfg, key=k)

@@ -1,0 +1,77 @@
+"""Golden PRNG-stream regression: the portable counter-hash noise stream
+and the shard-seed folding scheme are CONTRACTS — checkpointed training
+runs, the sharded quantize's cross-host reproducibility, and every
+bit-exact oracle in kernels/ref.py depend on them never drifting. The
+words below were generated at the stream's introduction (PR 2); any
+mismatch means an (accidental or deliberate) stream change. If
+deliberate, regenerate tests/golden/sr_prng_stream.json and call the
+break out in CHANGES.md; if accidental, fix the kernel.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels import sr_quantize as sq
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "sr_prng_stream.json")
+DRIFT = ("PRNG STREAM DRIFT: the fused quantize kernels no longer "
+         "reproduce the pinned %s — see tests/test_prng_golden.py "
+         "docstring before touching the golden file.")
+
+
+def _golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def _x():
+    return jnp.sin(jnp.arange(40, dtype=jnp.float32)) * 4.0
+
+
+def test_hash_stream_pinned():
+    got = np.asarray(ref.ref_fused_noise(7, 32) * (1 << 24)).astype(np.uint32)
+    np.testing.assert_array_equal(
+        got, np.asarray(_golden()["hash_u24_seed7_first32"], np.uint32),
+        err_msg=DRIFT % "counter-hash stream")
+
+
+def test_fold_shard_seed_pinned():
+    got = [int(sq.fold_shard_seed(jnp.int32(123), jnp.int32(i)))
+           for i in range(8)]
+    assert got == _golden()["fold_shard_seed123_idx0_7"], \
+        DRIFT % "shard-seed folding scheme"
+    # and ref.py's independent mirror must agree with the kernel-side fold
+    assert got == [int(ref.ref_fold_shard_seed(123, i)) for i in range(8)]
+
+
+def test_fused_quantized_words_pinned():
+    got = np.asarray(
+        ops.sr_quantize_fused(_x(), 42, 8, 4, use_pallas=True) * 16.0)
+    np.testing.assert_array_equal(
+        got, np.asarray(_golden()["fused_words_seed42_wl8_fl4"], np.float32),
+        err_msg=DRIFT % "quantized word stream")
+
+
+def test_stacked_quantized_words_pinned():
+    x = _x()
+    xs = jnp.stack([x, -x, x * 0.5])
+    got = np.asarray(ops.sr_quantize_fused(
+        xs, 42, jnp.asarray([5, 9, 13], jnp.int32),
+        jnp.asarray([2, 5, 9], jnp.int32), use_pallas=True)
+        * np.array([4.0, 32.0, 512.0], np.float32)[:, None])
+    np.testing.assert_array_equal(
+        got, np.asarray(_golden()["stacked_words_seed42_wl_5_9_13_fl_2_5_9"],
+                        np.float32),
+        err_msg=DRIFT % "stacked per-layer word stream")
+
+
+def test_int8_quantized_words_pinned():
+    got = np.asarray(ops.sr_quantize_fused_int8(_x(), 11, 4,
+                                                use_pallas=True))
+    np.testing.assert_array_equal(
+        got, np.asarray(_golden()["int8_words_seed11_fl4"], np.int8),
+        err_msg=DRIFT % "int8 word stream")

@@ -1,0 +1,329 @@
+"""Differential kernel-parity harness: the fused in-kernel-PRNG quantize
+kernels vs the pure-jnp oracles in ``kernels/ref.py``, word for word.
+
+Under interpret mode (CPU CI — this suite) the kernels draw the portable
+counter-hash stream, which ref.py regenerates exactly
+(``ref_fused_noise``): parity here is BIT-EXACT, not statistical. The
+sweep covers the full WL∈{2..16} × FL grid, per-layer-stacked shapes with
+heterogeneous ⟨WL,FL⟩ (L∈{1,4,12}), odd / non-tile-aligned trailing dims,
+pathological values (±0, denormals, inf-adjacent magnitudes, all-equal
+tensors), the int8-word flavor, the degenerate (size-1-mesh) shard_map
+wrapper, and the controller wiring on top — ~250 parameterized cases.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import QuantConfig
+from repro.core import controller
+from repro.kernels import ops, ref
+from repro.kernels import sr_quantize as sq
+
+KEY = jax.random.PRNGKey(7)
+
+WLS = list(range(2, 17))                 # the full WL ladder
+FLS = [-4, -1, 0, 1, 2, 4, 8, 12]
+INT8_FLS = [-3, -1, 0, 2, 4, 5, 6, 7]
+
+
+def _eq(got, want, msg=""):
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                  err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# Full WL × FL grid, bit-exact (120 cases; one compile — ⟨WL,FL⟩ is traced)
+
+
+@pytest.mark.parametrize("fl", FLS)
+@pytest.mark.parametrize("wl", WLS)
+def test_grid_bit_parity(wl, fl):
+    x = jax.random.normal(jax.random.fold_in(KEY, wl * 31 + fl), (613,)) * 2.5
+    seed = wl * 131 + fl
+    _eq(ops.sr_quantize_fused(x, seed, wl, fl, use_pallas=True),
+        ref.ref_sr_quantize_fused_words(x, seed, wl, fl))
+
+
+@pytest.mark.parametrize("fl", INT8_FLS)
+def test_grid_bit_parity_int8(fl):
+    x = jax.random.normal(jax.random.fold_in(KEY, fl + 8), (517,)) * 3
+    _eq(ops.sr_quantize_fused_int8(x, fl + 99, fl, use_pallas=True),
+        ref.ref_sr_quantize_fused_int8_words(x, fl + 99, fl))
+
+
+# ---------------------------------------------------------------------------
+# Per-layer-stacked heterogeneous ⟨WL,FL⟩ (the PR-2 tentpole regime)
+
+
+@pytest.mark.parametrize("draw", [0, 1])
+@pytest.mark.parametrize("trail", [(7,), (33, 65), (128, 512)])
+@pytest.mark.parametrize("L", [1, 4, 12])
+def test_stacked_heterogeneous_bit_parity(L, trail, draw):
+    rng = np.random.RandomState(L * 100 + len(trail) * 10 + draw)
+    wl = jnp.asarray(rng.randint(2, 17, L), jnp.int32)
+    fl = jnp.asarray(rng.randint(-2, 13, L), jnp.int32)
+    x = jax.random.normal(jax.random.fold_in(KEY, L + draw), (L,) + trail) * 2
+    _eq(ops.sr_quantize_fused(x, 5 + draw, wl, fl, use_pallas=True),
+        ref.ref_sr_quantize_fused_stacked_words(x, 5 + draw, wl, fl),
+        f"L={L} wl={wl} fl={fl}")
+
+
+@pytest.mark.parametrize("L", [1, 4, 12])
+def test_stacked_heterogeneous_bit_parity_int8(L):
+    rng = np.random.RandomState(L)
+    fl = jnp.asarray(rng.randint(-2, 8, L), jnp.int32)
+    x = jax.random.normal(jax.random.fold_in(KEY, L), (L, 37, 33)) * 4
+    _eq(ops.sr_quantize_fused_int8(x, L * 7, fl, use_pallas=True),
+        ref.ref_sr_quantize_fused_stacked_int8_words(x, L * 7, fl))
+
+
+@pytest.mark.parametrize("wl", WLS)
+def test_stacked_l1_is_unstacked(wl):
+    """The stacked kernel's stream indexes the padded stack flat, so L=1
+    must be bit-identical to the unstacked kernel at the same ⟨WL,FL⟩."""
+    x = jax.random.normal(jax.random.fold_in(KEY, wl), (1, 47, 130))
+    wlv = jnp.asarray([wl], jnp.int32)
+    flv = jnp.asarray([wl // 2], jnp.int32)
+    _eq(ops.sr_quantize_fused(x, 3, wlv, flv, use_pallas=True)[0],
+        ops.sr_quantize_fused(x[0], 3, wl, wl // 2, use_pallas=True))
+
+
+@pytest.mark.parametrize("block_rows", [1, 3, 8, 256])
+def test_stream_independent_of_block_rows(block_rows):
+    """The portable stream hashes global element indices, so re-tiling the
+    grid must not change a single word (stacked and unstacked)."""
+    x = jax.random.normal(KEY, (2, 700, 130))
+    wl = jnp.asarray([8, 5], jnp.int32)
+    fl = jnp.asarray([4, 2], jnp.int32)
+    base = sq.sr_quantize_fused_stacked(x, 11, wl, fl, interpret=True)
+    _eq(sq.sr_quantize_fused_stacked(x, 11, wl, fl, interpret=True,
+                                     block_rows=block_rows), base)
+    flat = x[0]
+    _eq(sq.sr_quantize_fused(flat, 11, 8, 4, interpret=True,
+                             block_rows=block_rows),
+        sq.sr_quantize_fused(flat, 11, 8, 4, interpret=True))
+
+
+# ---------------------------------------------------------------------------
+# Odd / non-tile-aligned trailing dims
+
+
+ODD_SHAPES = [(1,), (127,), (511,), (512,), (513,), (640,), (2, 513),
+              (129, 3), (8, 128), (3, 5, 7)]
+
+
+@pytest.mark.parametrize("prec", [(8, 4), (13, 9)])
+@pytest.mark.parametrize("shape", ODD_SHAPES)
+def test_odd_shapes_bit_parity(shape, prec):
+    wl, fl = prec
+    x = jax.random.normal(jax.random.fold_in(KEY, len(shape)), shape) * 2
+    _eq(ops.sr_quantize_fused(x, 23, wl, fl, use_pallas=True),
+        ref.ref_sr_quantize_fused_words(x, 23, wl, fl))
+
+
+@pytest.mark.parametrize("trail", [(1,), (513,), (127, 3), (5, 7, 11)])
+def test_odd_shapes_stacked_bit_parity(trail):
+    x = jax.random.normal(jax.random.fold_in(KEY, sum(trail)), (3,) + trail)
+    wl = jnp.asarray([4, 9, 16], jnp.int32)
+    fl = jnp.asarray([2, 5, 11], jnp.int32)
+    _eq(ops.sr_quantize_fused(x, 29, wl, fl, use_pallas=True),
+        ref.ref_sr_quantize_fused_stacked_words(x, 29, wl, fl))
+
+
+# ---------------------------------------------------------------------------
+# Pathological values
+
+
+def _patho(name):
+    return {
+        "signed_zeros": jnp.array([0.0, -0.0] * 320, jnp.float32),
+        "denormals": jnp.array([1e-42, -3e-41, 5e-44, -1e-45] * 160,
+                               jnp.float32),
+        "inf_adjacent": jnp.array([3.3e38, -3.3e38, 1e30, -1e25] * 160,
+                                  jnp.float32),
+        "all_equal": jnp.full((640,), 0.3, jnp.float32),
+        "all_equal_negative": jnp.full((640,), -1.75, jnp.float32),
+        "mixed_extremes": jnp.array([0.0, -0.0, 1e-42, 3.3e38, -3.3e38,
+                                     0.5, -0.5, 1.0] * 80, jnp.float32),
+    }[name]
+
+
+PATHO = ["signed_zeros", "denormals", "inf_adjacent", "all_equal",
+         "all_equal_negative", "mixed_extremes"]
+
+
+@pytest.mark.parametrize("prec", [(2, 0), (8, 4), (16, 12)])
+@pytest.mark.parametrize("case", PATHO)
+def test_pathological_bit_parity(case, prec):
+    wl, fl = prec
+    x = _patho(case)
+    _eq(ops.sr_quantize_fused(x, 31, wl, fl, use_pallas=True),
+        ref.ref_sr_quantize_fused_words(x, 31, wl, fl), case)
+
+
+@pytest.mark.parametrize("case", PATHO)
+def test_pathological_stacked_bit_parity(case):
+    x = jnp.stack([_patho(case), -_patho(case)])
+    wl = jnp.asarray([3, 14], jnp.int32)
+    fl = jnp.asarray([1, 10], jnp.int32)
+    _eq(ops.sr_quantize_fused(x, 37, wl, fl, use_pallas=True),
+        ref.ref_sr_quantize_fused_stacked_words(x, 37, wl, fl), case)
+
+
+@pytest.mark.parametrize("case", PATHO)
+def test_pathological_bit_parity_int8(case):
+    x = _patho(case)
+    _eq(ops.sr_quantize_fused_int8(x, 41, 4, use_pallas=True),
+        ref.ref_sr_quantize_fused_int8_words(x, 41, 4), case)
+
+
+# ---------------------------------------------------------------------------
+# Container dtypes
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("stacked", [False, True])
+def test_dtype_containers_bit_parity(dtype, stacked):
+    if stacked:
+        x = (jax.random.normal(KEY, (2, 65, 33)) * 2).astype(dtype)
+        wl = jnp.asarray([6, 11], jnp.int32)
+        fl = jnp.asarray([3, 7], jnp.int32)
+        _eq(ops.sr_quantize_fused(x, 43, wl, fl, use_pallas=True),
+            ref.ref_sr_quantize_fused_stacked_words(x, 43, wl, fl))
+    else:
+        x = (jax.random.normal(KEY, (650,)) * 2).astype(dtype)
+        _eq(ops.sr_quantize_fused(x, 43, 8, 4, use_pallas=True),
+            ref.ref_sr_quantize_fused_words(x, 43, 8, 4))
+
+
+# ---------------------------------------------------------------------------
+# Degenerate shard_map wrapper (size-1 mesh axes run on 1 device): the
+# per-shard seed fold must engage and match the sharded oracle at grid
+# (1,…,1). Real multi-device parity lives in tests/test_quantize_sharded.py.
+
+
+@pytest.mark.parametrize("stacked", [False, True])
+def test_sharded_degenerate_bit_parity(stacked):
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    if stacked:
+        x = jax.random.normal(KEY, (4, 16, 64))
+        sh = NamedSharding(mesh, P("data", None, "model"))
+        wl = jnp.asarray([4, 8, 12, 16], jnp.int32)
+        fl = jnp.asarray([2, 4, 8, 10], jnp.int32)
+        _eq(ops.sr_quantize_fused(x, 47, wl, fl, use_pallas=True,
+                                  sharding=sh),
+            ref.ref_sr_quantize_fused_sharded_words(x, 47, wl, fl,
+                                                    (1, 1, 1)))
+    else:
+        x = jax.random.normal(KEY, (8, 64))
+        sh = NamedSharding(mesh, P("data", "model"))
+        _eq(ops.sr_quantize_fused(x, 47, 8, 4, use_pallas=True, sharding=sh),
+            ref.ref_sr_quantize_fused_sharded_words(x, 47, 8, 4, (1, 1)))
+
+
+# ---------------------------------------------------------------------------
+# Grid exactness across dispatch regimes: XLA CPU's exp2 is off an ulp at
+# |FL| ≳ 10 (exp2(15) = 32767.984), which used to put the XLA-path grid off
+# its exact powers of two at high FL while the kernels were exact. Both
+# must sit on the same exact grid now, whatever regime a leaf lands in.
+
+
+@pytest.mark.parametrize("prec", [(16, 12), (16, 15), (12, 10), (8, -12)])
+def test_xla_and_kernel_grids_are_exact(prec):
+    from repro.core import fixed_point as fxp
+    wl, fl = prec
+    scale = float(fxp.pow2i(fl))
+    assert scale == 2.0 ** fl
+    x = jax.random.normal(jax.random.fold_in(KEY, wl), (640,)) * 4
+    u = ref.ref_fused_noise(3, x.size).reshape(x.shape)
+    q_xla = fxp.quantize(x, wl, fl, u=u)
+    # every XLA-path word is an integer on the 2^-FL grid, in range
+    words = np.asarray(q_xla) * 2.0 ** fl
+    np.testing.assert_array_equal(words, np.round(words))
+    assert words.max() <= 2.0 ** (wl - 1) - 1 and \
+        words.min() >= -(2.0 ** (wl - 1))
+    # and identical to the kernel-side semantics for the same noise bits
+    _eq(q_xla, ref.ref_sr_quantize(x, u, wl, fl))
+
+
+def test_int8_dequant_scale_exact_in_bf16():
+    """The packed/int8 dequant scale 2^-FL must be an EXACT power of two in
+    bf16 — bf16 exp2 is off by up to ~3% (exp2(-10) → 0.00099945), which
+    would dequantize every int8 word onto a wrong, off-grid value."""
+    from repro.core import fixed_point as fxp
+    for fl in range(-8, 17):
+        sc = float(fxp.pow2i(jnp.int32(-fl)).astype(jnp.bfloat16))
+        assert sc == 2.0 ** -fl, fl
+
+
+def test_fallback_refuses_sharding():
+    """use_pallas=False cannot honor the per-shard seed contract or the
+    no-collective guarantee — it must refuse, not silently degrade."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
+    sh = NamedSharding(mesh, P("data"))
+    x = jnp.ones((8,))
+    with pytest.raises(ValueError, match="use_pallas"):
+        ops.sr_quantize_fused(x, 0, 8, 4, use_pallas=False, sharding=sh)
+    with pytest.raises(ValueError, match="use_pallas"):
+        ops.sr_quantize_fused_int8(x, 0, 4, use_pallas=False, sharding=sh)
+
+
+# ---------------------------------------------------------------------------
+# Controller wiring on top of the kernels: quantize_params{,_packed} must
+# hand every regime the right seed/precision and come back word-identical.
+
+
+@pytest.mark.parametrize("container", ["float32", "int8"])
+def test_quantize_params_matches_oracles(container):
+    qcfg = dataclasses.replace(QuantConfig(), use_pallas=True)
+    params = {"dense": {"w": jax.random.normal(KEY, (48, 64))},
+              "blocks": {"mlp": {"w": jax.random.normal(KEY, (3, 24, 40))}}}
+    st = controller.init_adapt_state(params, qcfg)
+    # heterogeneous per-layer precision, as after a precision switch
+    ts = st["tensors"]["blocks/mlp/w"]
+    ts["wl"] = jnp.asarray([4, 8, 13], jnp.int32)
+    ts["fl"] = jnp.asarray([2, 4, 9], jnp.int32)
+    dtype = jnp.int8 if container == "int8" else jnp.float32
+    q = controller.quantize_params(params, st, qcfg, key=KEY, dtype=dtype)
+
+    sd = controller._leaf_seed(KEY, "dense/w")
+    sb = controller._leaf_seed(KEY, "blocks/mlp/w")
+    td = st["tensors"]["dense/w"]
+    if container == "int8":
+        from repro.core import fixed_point as fxp
+        qd = ref.ref_sr_quantize_fused_int8_words(params["dense"]["w"], sd,
+                                                  td["fl"])
+        want_d = (qd.astype(jnp.bfloat16)
+                  * fxp.pow2i(-td["fl"]).astype(jnp.bfloat16))
+        qb = ref.ref_sr_quantize_fused_stacked_int8_words(
+            params["blocks"]["mlp"]["w"], sb, ts["fl"])
+        want_b = (qb.astype(jnp.bfloat16)
+                  * fxp.pow2i(-ts["fl"]).astype(jnp.bfloat16)
+                  .reshape(3, 1, 1))
+    else:
+        want_d = ref.ref_sr_quantize_fused_words(params["dense"]["w"], sd,
+                                                 td["wl"], td["fl"])
+        want_b = ref.ref_sr_quantize_fused_stacked_words(
+            params["blocks"]["mlp"]["w"], sb, ts["wl"], ts["fl"])
+    _eq(q["dense"]["w"], want_d)
+    _eq(q["blocks"]["mlp"]["w"], want_b)
+
+
+def test_quantize_params_packed_matches_oracles():
+    qcfg = dataclasses.replace(QuantConfig(), use_pallas=True)
+    params = {"blocks": {"mlp": {"w": jax.random.normal(KEY, (3, 24, 40))}}}
+    st = controller.init_adapt_state(params, qcfg)
+    qp = controller.quantize_params_packed(params, st, qcfg, key=KEY)
+    leaf = qp["blocks"]["mlp"]["w"]
+    ts = st["tensors"]["blocks/mlp/w"]
+    _eq(leaf["q8"],
+        ref.ref_sr_quantize_fused_stacked_int8_words(
+            params["blocks"]["mlp"]["w"],
+            controller._leaf_seed(KEY, "blocks/mlp/w"), ts["fl"]))
+    assert leaf["sc"].shape == (3, 1, 1)
