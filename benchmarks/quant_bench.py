@@ -17,6 +17,11 @@ Hot spots, each measured XLA-reference vs fused-Pallas:
   * ``switch`` — PushDown's EDF ladder (alg. 3). Baseline: 18 vmapped
     quantize probes + 36 scatter-add histograms. Fused: one
     ``edf_ladder_hists`` launch + KL/argmin epilogue.
+  * ``fwd_bwd`` (``--skip-fwd-bwd`` to omit) — the DIFFERENTIATED forward:
+    fxp_matmul and flash attention, forward-only and value_and_grad, the
+    Pallas custom-VJP route vs XLA autodiff of the jnp oracle. Structure
+    facts recorded: the grad jaxpr contains the forward AND both backward
+    Pallas kernels (no silent XLA fallback under differentiation).
 
 Besides wall times the run records the *structural* facts the perf claims
 rest on, read off the jaxprs (these hold on any backend):
@@ -246,7 +251,93 @@ def bench_switch(reps: int, sample: int = 65536) -> dict:
     }
 
 
-def run(quick: bool = False, out: str = "BENCH_quant.json") -> dict:
+MATMUL_SIZES = [(512, 1024, 512), (1024, 2048, 1024)]
+MATMUL_SIZES_QUICK = [(128, 256, 128), (256, 512, 256)]
+ATTN_SIZES = [(2, 512, 8, 2, 64), (1, 1024, 8, 2, 64)]   # (B,S,H,Hkv,D)
+ATTN_SIZES_QUICK = [(1, 128, 4, 2, 32), (2, 256, 4, 2, 64)]
+
+
+def _grad_structure(fn, *args) -> dict:
+    """Fwd + bwd Pallas kernels present in the differentiated jaxpr."""
+    jaxpr = jax.make_jaxpr(jax.grad(fn))(*args).jaxpr
+    names = jaxpr_tools.pallas_kernel_names(jaxpr)
+    return {"pallas_calls_in_grad": len(names),
+            "grad_kernels": sorted(set(names))}
+
+
+def bench_fwd_bwd(matmul_sizes, attn_sizes, reps: int) -> dict:
+    """The differentiated train forward: Pallas custom-VJP vs XLA oracle.
+
+    The loss is QUADRATIC in the output and timed via value_and_grad: a
+    linear loss's cotangent is a constant, which XLA folds away on the
+    baseline (its 'backward' would measure nothing) while the opaque
+    custom_vjp can't be folded — a phantom slowdown."""
+    from repro.kernels import ref
+    matmul_rows = []
+    for m, k, n in matmul_sizes:
+        x = jax.random.normal(jax.random.PRNGKey(7), (m, k), jnp.float32)
+        wq = jax.random.randint(jax.random.PRNGKey(8), (k, n), -128, 128,
+                                jnp.int8)
+        s = jnp.float32(1 / 64)
+
+        def fwd(v, use_pallas):
+            out = ops.fxp_matmul(v, wq, s, use_pallas=use_pallas)
+            return 0.5 * jnp.sum(out * out)
+
+        g_pal = jax.jit(jax.value_and_grad(lambda v: fwd(v, True)))
+        g_xla = jax.jit(jax.value_and_grad(lambda v: fwd(v, False)))
+        f_pal = jax.jit(lambda v: fwd(v, True))
+        f_xla = jax.jit(lambda v: fwd(v, False))
+        row = {
+            "shape": [m, k, n],
+            "xla_fwd_ms": _time(lambda: f_xla(x), reps=reps) * 1e3,
+            "pallas_fwd_ms": _time(lambda: f_pal(x), reps=reps) * 1e3,
+            "xla_fwd_bwd_ms": _time(lambda: g_xla(x), reps=reps) * 1e3,
+            "pallas_fwd_bwd_ms": _time(lambda: g_pal(x), reps=reps) * 1e3,
+            **_grad_structure(lambda v: fwd(v, True), x),
+        }
+        matmul_rows.append(row)
+        print(f"  matmul   {(m, k, n)}: fwd+bwd xla "
+              f"{row['xla_fwd_bwd_ms']:8.2f} ms | pallas "
+              f"{row['pallas_fwd_bwd_ms']:8.2f} ms")
+
+    attn_rows = []
+    for B, S, H, Hkv, D in attn_sizes:
+        ks = jax.random.split(jax.random.PRNGKey(9), 3)
+        q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+        kv = [jax.random.normal(k_, (B, S, Hkv, D), jnp.float32)
+              for k_ in ks[1:]]
+
+        def fwd(v, use_pallas):
+            out = ops.attention(v, *kv, causal=True, use_pallas=use_pallas,
+                                bq=256, bk=256)
+            return 0.5 * jnp.sum(out * out)
+
+        def ref_fwd(v):
+            out = ref.ref_attention(v, *kv, causal=True)
+            return 0.5 * jnp.sum(out * out)
+
+        g_pal = jax.jit(jax.value_and_grad(lambda v: fwd(v, True)))
+        g_xla = jax.jit(jax.value_and_grad(ref_fwd))
+        f_pal = jax.jit(lambda v: fwd(v, True))
+        f_xla = jax.jit(ref_fwd)
+        row = {
+            "shape": [B, S, H, Hkv, D],
+            "xla_fwd_ms": _time(lambda: f_xla(q), reps=reps) * 1e3,
+            "pallas_fwd_ms": _time(lambda: f_pal(q), reps=reps) * 1e3,
+            "xla_fwd_bwd_ms": _time(lambda: g_xla(q), reps=reps) * 1e3,
+            "pallas_fwd_bwd_ms": _time(lambda: g_pal(q), reps=reps) * 1e3,
+            **_grad_structure(lambda v: fwd(v, True), q),
+        }
+        attn_rows.append(row)
+        print(f"  attn     {(B, S, H, Hkv, D)}: fwd+bwd xla "
+              f"{row['xla_fwd_bwd_ms']:8.2f} ms | pallas "
+              f"{row['pallas_fwd_bwd_ms']:8.2f} ms")
+    return {"matmul": matmul_rows, "attention": attn_rows}
+
+
+def run(quick: bool = False, out: str = "BENCH_quant.json",
+        skip_fwd_bwd: bool = False) -> dict:
     print("\n== Precision-machinery microbenchmark ==")
     backend = jax.default_backend()
     if backend != "tpu":
@@ -262,6 +353,10 @@ def run(quick: bool = False, out: str = "BENCH_quant.json") -> dict:
         "quantize_stacked": bench_quantize_stacked(stacked_sizes, reps),
         "quantize_sharded": bench_quantize_sharded(reps),
         "switch": bench_switch(reps, sample=16384 if quick else 65536),
+        "fwd_bwd": ({"skipped": "--skip-fwd-bwd"} if skip_fwd_bwd else
+                    bench_fwd_bwd(
+                        MATMUL_SIZES_QUICK if quick else MATMUL_SIZES,
+                        ATTN_SIZES_QUICK if quick else ATTN_SIZES, reps)),
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
@@ -273,8 +368,12 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="BENCH_quant.json")
+    ap.add_argument("--skip-fwd-bwd", action="store_true",
+                    help="omit the differentiated fwd+bwd matmul/attention "
+                         "section (interpret-mode bwd kernels are slow on "
+                         "CPU)")
     args = ap.parse_args(argv)
-    run(quick=args.quick, out=args.out)
+    run(quick=args.quick, out=args.out, skip_fwd_bwd=args.skip_fwd_bwd)
     return 0
 
 

@@ -117,11 +117,20 @@ class QuantConfig:
     # sub-tensor exclusions (substring match on param path)
     exclude: Tuple[str, ...] = ("router", "norm", "a_log", "dt_bias", "scale")
     # --- Pallas dispatch flags -------------------------------------------
-    # use_pallas routes the precision machinery through the fused TPU
-    # kernels (interpret mode on CPU, so CI exercises the same code):
+    # use_pallas routes the WHOLE train step through the fused TPU kernels
+    # (interpret mode on CPU, so CI exercises the same code):
     #   * quantize_params / quantize_params_packed → sr_quantize_fused[:_int8]
     #   * precision_switch's PushDown ladder        → edf_ladder_hists
-    #   * the model forward's matmuls/attention     → fxp_matmul / flash_attn
+    #   * the model forward's attention              → flash_attention
+    #     — including UNDER value_and_grad: the forward ops carry custom
+    #     VJPs whose backward passes are Pallas kernels (recompute-based
+    #     flash dQ/dK/dV; fxp_matmul/int8_matmul likewise ship VJPs with
+    #     transposed-index-map int8 weight streaming for dx, though the
+    #     model's dense layers don't call them yet — ROADMAP), pinned by
+    #     tests/test_vjp_differential.py.
+    # Remaining exclusions: attention slots whose window arrives as a traced
+    # scalar (masked XLA path), the CNN family's conv forward, and
+    # unevenly-sharded / RTN-mode quantize leaves (controller._use_fused_prng).
     use_pallas: bool = False
     # fused_prng draws the stochastic-rounding noise INSIDE the quantize
     # kernel (hardware PRNG on TPU, counter-hash under interpret), so the

@@ -45,6 +45,33 @@ def count_primitives(jaxpr, name_substr: str) -> int:
     return sum(name_substr in eqn.primitive.name for eqn in iter_eqns(jaxpr))
 
 
+def pallas_eqns(jaxpr):
+    """Every pallas_call eqn, descending into scan/cond/pjit/custom-vjp
+    bodies — the raw material for "no silent XLA fallback" assertions."""
+    return [eqn for eqn in iter_eqns(jaxpr)
+            if eqn.primitive.name == "pallas_call"]
+
+
+def pallas_kernel_names(jaxpr):
+    """Best-effort kernel-function name per pallas_call eqn (e.g.
+    '_flash_kernel', '_flash_dq_kernel'), read from the eqn's
+    name_and_src_info (newer JAX) or name param."""
+    names = []
+    for eqn in pallas_eqns(jaxpr):
+        info = eqn.params.get("name_and_src_info")
+        name = getattr(info, "name", None) or eqn.params.get("name") or ""
+        names.append(name)
+    return names
+
+
+def count_pallas_calls(jaxpr, name_substr: str = "") -> int:
+    """pallas_call eqns whose kernel name contains ``name_substr`` ('' =
+    all). The structural contract behind quant.use_pallas: the jitted,
+    DIFFERENTIATED forward must contain the expected forward and backward
+    kernels — a silent fallback to XLA shows up here as a zero."""
+    return sum(name_substr in n for n in pallas_kernel_names(jaxpr))
+
+
 # Gather-shaped collectives whose param-sized outputs would mean the f32
 # master (or its quantized copy) is being reassembled across the mesh —
 # exactly what the shard_map-wrapped quantize exists to prevent. psum/

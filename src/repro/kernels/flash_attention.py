@@ -14,6 +14,15 @@ Features needed by the assigned archs, all fused:
   * GQA via kv-head index mapping (no jnp.repeat materialization)
 
 Grid: (B, H, nq, nk), kv innermost ("arbitrary"), MXU-aligned q/kv blocks.
+
+The forward optionally emits the per-row logsumexp (``return_lse``) — the
+residual the recompute-based backward (``flash_attention_vjp``) needs. The
+backward precomputes the tiny per-row D = Σ dy∘o (one XLA elementwise
+pass; o is not an operand of either launch) and then runs two more Pallas
+kernels over the same block scheme: ``_dq`` re-derives the probabilities
+from the stashed lse, ``_dkv`` accumulates dK/dV tiles with the q-loop
+innermost — the rep query heads of each GQA group fold into the same
+accumulators, so HBM only ever sees (B, Hkv, Skv, D).
 """
 from __future__ import annotations
 
@@ -25,15 +34,43 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import tpu_compiler_params
+from repro.kernels.fxp_matmul import _fit_block
 
 Array = jax.Array
 
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+def _positions(iq: int, ik: int, bq: int, bk: int, q_offset: int):
+    """Absolute key-space positions of a (bq, bk) block: queries are
+    end-aligned (q_offset = Skv − Sq)."""
+    qpos = (iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            + q_offset)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    return qpos, kpos
+
+
+def _block_mask(iq, ik, *, bq: int, bk: int, causal: bool, window: int,
+                q_offset: int):
+    """The ONE causal/sliding-window mask both the forward and the
+    backward recompute share — any inclusivity change here stays
+    bit-identical across o, lse and dQ/dK/dV."""
+    qpos, kpos = _positions(iq, ik, bq, bk, q_offset)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, *refs,
                   scale: float, causal: bool, window: int, softcap: float,
-                  bq: int, bk: int, nk: int, q_offset: int):
+                  bq: int, bk: int, nk: int, q_offset: int, with_lse: bool):
+    if with_lse:
+        o_ref, lse_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        (o_ref, m_ref, l_ref, acc_ref), lse_ref = refs, None
     iq, ik = pl.program_id(2), pl.program_id(3)
 
     @pl.when(ik == 0)
@@ -52,14 +89,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     if softcap > 0.0:
         logits = softcap * jnp.tanh(logits / softcap)
 
-    qpos = (iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-            + q_offset)                           # absolute key-space position
-    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = jnp.ones((bq, bk), jnp.bool_)
-    if causal:
-        mask &= kpos <= qpos
-    if window > 0:
-        mask &= kpos > qpos - window
+    mask = _block_mask(iq, ik, bq=bq, bk=bk, causal=causal, window=window,
+                       q_offset=q_offset)
     logits = jnp.where(mask, logits, NEG_INF)
 
     m_prev, l_prev = m_ref[...], l_ref[...]
@@ -75,27 +106,43 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(ik == nk - 1)
     def _done():
+        # Rows with NO surviving key (Sq > Skv under causal end-alignment)
+        # keep m = NEG_INF: exp(NEG_INF − NEG_INF) would average v
+        # uniformly, a meaningless row the backward cannot reconstruct
+        # from the lse — emit exactly 0 (and lse = NEG_INF) instead, so
+        # forward and VJP agree that the row is constant.
+        dead = m_ref[...] <= NEG_INF * 0.5
         l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        o_ref[0, 0] = jnp.where(dead, 0.0,
+                                acc_ref[...] / l).astype(o_ref.dtype)
+        if lse_ref is not None:
+            lse_ref[0, 0] = jnp.where(dead, NEG_INF,
+                                      m_ref[...] + jnp.log(l))[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
-                                             "scale", "bq", "bk", "interpret"))
+                                             "scale", "bq", "bk", "interpret",
+                                             "return_lse"))
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
                     window: int = 0, softcap: float = 0.0,
                     scale: float | None = None, bq: int = 512, bk: int = 512,
-                    interpret: bool = False) -> Array:
+                    interpret: bool = False, return_lse: bool = False):
     """q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D); returns (B, Sq, H, D).
 
     Query positions are aligned to the *end* of the key space
     (q_offset = Skv − Sq), matching prefill-with-cache and decode semantics.
+    ``return_lse`` additionally returns the per-row logsumexp (B, H, Sq)
+    f32 — the backward pass's residual. Rows whose mask admits no key at
+    all (Sq > Skv under causal alignment) are exactly 0 with lse = NEG_INF
+    — flash convention, and what the VJP assumes (ref_attention instead
+    softmaxes the all-masked row into a uniform average).
     """
     B, Sq, H, D = q.shape
     _, Skv, Hkv, _ = k.shape
     rep = H // Hkv
     sc = scale if scale is not None else (1.0 / D ** 0.5)
-    bq = min(bq, Sq)
-    bk = min(bk, Skv)
+    bq = _fit_block(bq, Sq)
+    bk = _fit_block(bk, Skv)
     nq, nk = pl.cdiv(Sq, bq), pl.cdiv(Skv, bk)
 
     qt = q.transpose(0, 2, 1, 3)                  # (B, H, Sq, D)
@@ -104,7 +151,14 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
 
     kernel = functools.partial(
         _flash_kernel, scale=sc, causal=causal, window=window,
-        softcap=softcap, bq=bq, bk=bk, nk=nk, q_offset=Skv - Sq)
+        softcap=softcap, bq=bq, bk=bk, nk=nk, q_offset=Skv - Sq,
+        with_lse=return_lse)
+
+    out_shape = [jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype)]
+    out_specs = [pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0))]
+    if return_lse:
+        out_shape.append(jax.ShapeDtypeStruct((B, H, Sq), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)))
 
     out = pl.pallas_call(
         kernel,
@@ -116,8 +170,8 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
             pl.BlockSpec((1, 1, bk, D),
                          lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -128,4 +182,230 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
     )(qt, kt, vt)
-    return out.transpose(0, 2, 1, 3)
+    o = out[0].transpose(0, 2, 1, 3)
+    return (o, out[1]) if return_lse else o
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels (recompute-based, standard flash scheme)
+
+
+def _block_probs(q, k, lse, iq, ik, *, scale, causal, window, softcap,
+                 bq, bk, q_offset):
+    """Recompute the (bq, bk) probability block p = exp(t − lse) from the
+    stashed logsumexp, plus the pre-mask softcapped logits t (needed for
+    the tanh chain). Masked entries are exactly 0 (no NEG_INF arithmetic,
+    so fully-masked rows can't poison the accumulators with inf·0)."""
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+    t = softcap * jnp.tanh(s / softcap) if softcap > 0.0 else s
+    mask = _block_mask(iq, ik, bq=bq, bk=bk, causal=causal, window=window,
+                       q_offset=q_offset)
+    p = jnp.where(mask, jnp.exp(t - lse[:, None]), 0.0)
+    return p, t
+
+
+def _grad_wrt_logits(p, dp, delta, t, *, softcap):
+    """dt = p∘(dp − D); chain through the softcap tanh back to the raw
+    (pre-cap, post-scale) logits."""
+    dt = p * (dp - delta)
+    if softcap > 0.0:
+        dt = dt * (1.0 - jnp.square(t / softcap))
+    return dt
+
+
+def _flash_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, dq_ref,
+                     acc_ref, *, scale: float, causal: bool,
+                     window: int, softcap: float, bq: int, bk: int, nk: int,
+                     q_offset: int):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    p, t = _block_probs(q, k, lse_ref[0, 0], iq, ik, scale=scale,
+                        causal=causal, window=window, softcap=softcap,
+                        bq=bq, bk=bk, q_offset=q_offset)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    g = _grad_wrt_logits(p, dp, d_ref[0, 0][:, None], t, softcap=softcap)
+    acc_ref[...] += jax.lax.dot_general(
+        g, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        dq_ref[0, 0] = (acc_ref[...] * scale).astype(dq_ref.dtype)
+
+
+def _flash_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref,
+                      dk_ref, dv_ref, dk_acc, dv_acc, *, scale: float,
+                      causal: bool, window: int, softcap: float, bq: int,
+                      bk: int, nq: int, nj: int, q_offset: int):
+    # Grid dim 3 runs (rep · nq) steps head-major: j = r·nq + iq. The rep
+    # query heads of the GQA group fold into the SAME (bk, D) accumulators,
+    # so the kernel writes the group-summed dK/dV tiles directly — never a
+    # rep×-sized per-query-head cotangent in HBM.
+    ik, j = pl.program_id(2), pl.program_id(3)
+    iq = jax.lax.rem(j, nq)
+
+    @pl.when(j == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    delta = d_ref[0, 0][:, None]
+    p, t = _block_probs(q, k, lse_ref[0, 0], iq, ik, scale=scale,
+                        causal=causal, window=window, softcap=softcap,
+                        bq=bq, bk=bk, q_offset=q_offset)
+    dv_acc[...] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    g = _grad_wrt_logits(p, dp, delta, t, softcap=softcap)
+    dk_acc[...] += jax.lax.dot_general(
+        g, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == nj - 1)
+    def _done():
+        dk_ref[0, 0] = dk_acc[...] * scale
+        dv_ref[0, 0] = dv_acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "scale", "bq", "bk", "interpret"))
+def flash_attention_bwd(q: Array, k: Array, v: Array, o: Array, lse: Array,
+                        do: Array, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, scale: float | None = None,
+                        bq: int = 512, bk: int = 512,
+                        interpret: bool = False):
+    """dQ/dK/dV for :func:`flash_attention` given the stashed (o, lse).
+
+    Per-row D = Σ dy∘o is a tiny (B, H, Sq) f32 precompute (one fused XLA
+    elementwise pass — o is not an operand of either kernel launch), then
+    two launches: dQ with the kv loop innermost (one (bq, D) f32
+    accumulator), and dK/dV gridded over KV heads with the (rep · nq)
+    q-blocks of the whole GQA group innermost, group-summing in VMEM.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = H // Hkv
+    sc = scale if scale is not None else (1.0 / D ** 0.5)
+    bq = _fit_block(bq, Sq)
+    bk = _fit_block(bk, Skv)
+    nq, nk = pl.cdiv(Sq, bq), pl.cdiv(Skv, bk)
+
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    dot = do.transpose(0, 2, 1, 3)
+    delta = jnp.sum(dot.astype(jnp.float32)
+                    * o.transpose(0, 2, 1, 3).astype(jnp.float32), axis=-1)
+
+    qspec = pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0))
+    lspec = pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i))
+
+    dq = pl.pallas_call(
+        functools.partial(_flash_dq_kernel, scale=sc, causal=causal,
+                          window=window, softcap=softcap, bq=bq, bk=bk,
+                          nk=nk, q_offset=Skv - Sq),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            qspec,
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+            qspec, lspec, lspec,
+        ],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+    )(qt, kt, vt, dot, lse, delta)
+
+    # dK/dV: grid over KV heads and kv blocks; the innermost dim runs
+    # (rep · nq) steps — the q blocks of every query head in the GQA group
+    # — folding the group-sum into the kernel's own accumulation, so only
+    # the real (B, Hkv, Skv, D) cotangents ever reach HBM.
+    def _qh(h, j, r=rep, n=nq):
+        return h * r + j // n
+    qjspec = pl.BlockSpec((1, 1, bq, D),
+                          lambda b, h, i, j: (b, _qh(h, j), j % nq, 0))
+    ljspec = pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, _qh(h, j),
+                                                          j % nq))
+    kvjspec = pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h, i, 0))
+    dkv_out = pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h, i, 0))
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_dkv_kernel, scale=sc, causal=causal,
+                          window=window, softcap=softcap, bq=bq, bk=bk,
+                          nq=nq, nj=nq * rep, q_offset=Skv - Sq),
+        grid=(B, Hkv, nk, nq * rep),
+        in_specs=[qjspec, kvjspec, kvjspec, qjspec, ljspec, ljspec],
+        out_specs=[dkv_out, dkv_out],
+        out_shape=[jax.ShapeDtypeStruct((B, Hkv, Skv, D), jnp.float32),
+                   jax.ShapeDtypeStruct((B, Hkv, Skv, D), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bk, D), jnp.float32),
+                        pltpu.VMEM((bk, D), jnp.float32)],
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+    )(qt, kt, vt, dot, lse, delta)
+
+    return (dq.transpose(0, 2, 1, 3),
+            dk.astype(k.dtype).transpose(0, 2, 1, 3),
+            dv.astype(v.dtype).transpose(0, 2, 1, 3))
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_diff(cfg, q, k, v):
+    causal, window, softcap, scale, bq, bk, interpret = cfg
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, scale=scale, bq=bq, bk=bk,
+                           interpret=interpret)
+
+
+def _flash_diff_fwd(cfg, q, k, v):
+    causal, window, softcap, scale, bq, bk, interpret = cfg
+    o, lse = flash_attention(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale, bq=bq, bk=bk,
+                             interpret=interpret, return_lse=True)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_diff_bwd(cfg, res, do):
+    causal, window, softcap, scale, bq, bk, interpret = cfg
+    q, k, v, o, lse = res
+    return flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                               window=window, softcap=softcap, scale=scale,
+                               bq=bq, bk=bk, interpret=interpret)
+
+
+_flash_diff.defvjp(_flash_diff_fwd, _flash_diff_bwd)
+
+
+def flash_attention_vjp(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        window: int = 0, softcap: float = 0.0,
+                        scale: float | None = None, bq: int = 512,
+                        bk: int = 512, interpret: bool = False) -> Array:
+    """Differentiable :func:`flash_attention`: same forward kernel (plus the
+    lse stash under differentiation), Pallas recompute-based backward."""
+    return _flash_diff((causal, window, softcap, scale, bq, bk, interpret),
+                       q, k, v)

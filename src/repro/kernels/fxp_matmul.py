@@ -14,6 +14,21 @@ tile lives in a VMEM scratch across the K loop; MXU-aligned 128-multiples.
 A full-integer variant (``int8_matmul``) takes int8 activations too and
 accumulates in int32 — the v5e MXU's 2× int8 throughput path; used for
 serving (W8A8) and benchmarked in §Perf.
+
+Both ops also come in differentiable form (``fxp_matmul_vjp`` /
+``int8_matmul_vjp``): ``jax.custom_vjp`` rules whose backward passes are
+themselves Pallas kernels, so the differentiated training forward never
+falls back to a dequantized HBM weight copy either.
+
+  * dx = dy @ (wq·scale)ᵀ  — ``_matmul_dx_kernel`` streams the SAME int8
+    weight tiles the forward reads, just with a transposed index map
+    ((j, n) instead of (k, j)); dequant stays in-register.
+  * dw = xᵀ @ dy           — ``_matmul_dw_kernel``, f32 VMEM accumulation;
+    its contraction against wq yields the scale cotangent
+    dscale = Σ dw∘wq (= Σ dy∘(x@wq), XLA's reassociation of the same sum).
+  * dwq is float0: the int8 words are non-differentiable storage — the
+    straight-through path to the f32 master runs through the quantize,
+    not through the matmul words.
 """
 from __future__ import annotations
 
@@ -21,12 +36,35 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import tpu_compiler_params
 
 Array = jax.Array
+
+
+def _fit_block(b: int, d: int) -> int:
+    """Largest usable block ≤ b that tiles d EVENLY. Pallas pads partial
+    boundary blocks with garbage/NaN rather than zeros in interpret mode,
+    so a block size that does not divide the dim would silently poison the
+    accumulation; every wrapper here therefore refuses to create partial
+    blocks. Preference order: the requested b, else the largest divisor of
+    d that is ≤ b (keeps VMEM bounded for large non-aligned dims), else —
+    when d is so prime-ish the best divisor is a degenerate sliver — the
+    whole dim as one block."""
+    b = min(b, d)
+    if d % b == 0:
+        return b
+    best = max(c for c in range(1, b + 1) if d % c == 0)
+    return best if best >= max(8, b // 8) else d
+
+
+def float0_like(x: Array) -> np.ndarray:
+    """The cotangent for a non-differentiable integer operand (custom_vjp
+    requires an explicit float0 array for int primals)."""
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
 
 
 def _fxp_matmul_kernel(x_ref, w_ref, scale_ref, o_ref, acc_ref, *, nk: int):
@@ -54,7 +92,7 @@ def fxp_matmul(x: Array, wq: Array, scale: Array, *, bm: int = 256,
     K2, N = wq.shape
     assert K == K2, (x.shape, wq.shape)
     out_dtype = out_dtype or x.dtype
-    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    bm, bn, bk = _fit_block(bm, M), _fit_block(bn, N), _fit_block(bk, K)
     grid = (pl.cdiv(M, bm), pl.cdiv(N, bn), pl.cdiv(K, bk))
     kernel = functools.partial(_fxp_matmul_kernel, nk=grid[2])
     return pl.pallas_call(
@@ -95,7 +133,7 @@ def int8_matmul(xq: Array, wq: Array, sx: Array, sw: Array, *, bm: int = 256,
     """W8A8 path: (xq @ wq) * (sx*sw); int32 MXU accumulation, f32 out."""
     M, K = xq.shape
     _, N = wq.shape
-    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    bm, bn, bk = _fit_block(bm, M), _fit_block(bn, N), _fit_block(bk, K)
     grid = (pl.cdiv(M, bm), pl.cdiv(N, bn), pl.cdiv(K, bk))
     kernel = functools.partial(_int8_matmul_kernel, nk=grid[2])
     s = (sx.astype(jnp.float32) * sw.astype(jnp.float32)).reshape(1, 1)
@@ -114,3 +152,173 @@ def int8_matmul(xq: Array, wq: Array, sx: Array, sw: Array, *, bm: int = 256,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(xq, wq, s)
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels
+
+
+def _matmul_dx_kernel(dy_ref, w_ref, scale_ref, dx_ref, acc_ref, *, nn: int):
+    """dx tile = Σ_n dy(i,n) @ w(j,n)ᵀ — the weight tile is the forward's
+    int8 (K,N) array read through a transposed index map, dequantized
+    in-register; no transposed/dequantized weight copy ever exists in HBM."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dy = dy_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)           # int8 -> f32 in-register
+    acc_ref[...] += jax.lax.dot_general(
+        dy, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nn - 1)
+    def _done():
+        dx_ref[...] = (acc_ref[...] * scale_ref[0, 0]).astype(dx_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                                             "out_dtype"))
+def matmul_dx(dy: Array, wq: Array, scale: Array, *, bm: int = 256,
+              bn: int = 256, bk: int = 512, out_dtype=None,
+              interpret: bool = False) -> Array:
+    """dx = dy @ (wq * scale)ᵀ.  dy: (M,N); wq: (K,N) int8; out (M,K)."""
+    M, N = dy.shape
+    K, N2 = wq.shape
+    assert N == N2, (dy.shape, wq.shape)
+    out_dtype = out_dtype or dy.dtype
+    bm, bk, bn = _fit_block(bm, M), _fit_block(bk, K), _fit_block(bn, N)
+    grid = (pl.cdiv(M, bm), pl.cdiv(K, bk), pl.cdiv(N, bn))
+    kernel = functools.partial(_matmul_dx_kernel, nn=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, n: (i, n)),
+            pl.BlockSpec((bk, bn), lambda i, j, n: (j, n)),   # transposed map
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, n: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, K), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(dy, wq, scale.reshape(1, 1).astype(jnp.float32))
+
+
+def _matmul_dw_kernel(x_ref, dy_ref, dw_ref, acc_ref, *, nm: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, dy, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nm - 1)
+    def _done():
+        dw_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul_dw(x: Array, dy: Array, *, bm: int = 256, bn: int = 256,
+              bk: int = 512, interpret: bool = False) -> Array:
+    """dw = xᵀ @ dy in f32 (VMEM scratch accumulation over the M loop).
+    x: (M,K); dy: (M,N); out (K,N) f32."""
+    M, K = x.shape
+    M2, N = dy.shape
+    assert M == M2, (x.shape, dy.shape)
+    bk, bn, bm = _fit_block(bk, K), _fit_block(bn, N), _fit_block(bm, M)
+    grid = (pl.cdiv(K, bk), pl.cdiv(N, bn), pl.cdiv(M, bm))
+    kernel = functools.partial(_matmul_dw_kernel, nm=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, m: (m, i)),
+            pl.BlockSpec((bm, bn), lambda i, j, m: (m, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j, m: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((K, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(x, dy)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp rules
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fxp_matmul_diff(cfg, x, wq, scale):
+    bm, bn, bk, out_dtype, interpret = cfg
+    return fxp_matmul(x, wq, scale, bm=bm, bn=bn, bk=bk,
+                      out_dtype=out_dtype, interpret=interpret)
+
+
+def _fxp_matmul_diff_fwd(cfg, x, wq, scale):
+    return _fxp_matmul_diff(cfg, x, wq, scale), (x, wq, scale)
+
+
+def _fxp_matmul_diff_bwd(cfg, res, dy):
+    bm, bn, bk, _, interpret = cfg
+    x, wq, scale = res
+    dx = matmul_dx(dy, wq, scale, bm=bm, bn=bn, bk=bk,
+                   out_dtype=x.dtype, interpret=interpret)
+    dw = matmul_dw(x, dy, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    dscale = (jnp.sum(dw * wq.astype(jnp.float32))
+              .reshape(scale.shape).astype(scale.dtype))
+    return dx, float0_like(wq), dscale
+
+
+_fxp_matmul_diff.defvjp(_fxp_matmul_diff_fwd, _fxp_matmul_diff_bwd)
+
+
+def fxp_matmul_vjp(x: Array, wq: Array, scale: Array, *, bm: int = 256,
+                   bn: int = 256, bk: int = 512, out_dtype=None,
+                   interpret: bool = False) -> Array:
+    """Differentiable :func:`fxp_matmul`: same forward kernel, Pallas
+    backward (``matmul_dx`` / ``matmul_dw``)."""
+    return _fxp_matmul_diff((bm, bn, bk, out_dtype, interpret),
+                            x, wq, jnp.asarray(scale, jnp.float32))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _int8_matmul_diff(cfg, xq, wq, sx, sw):
+    bm, bn, bk, interpret = cfg
+    return int8_matmul(xq, wq, sx, sw, bm=bm, bn=bn, bk=bk,
+                       interpret=interpret)
+
+
+def _int8_matmul_diff_fwd(cfg, xq, wq, sx, sw):
+    return _int8_matmul_diff(cfg, xq, wq, sx, sw), (xq, wq, sx, sw)
+
+
+def _int8_matmul_diff_bwd(cfg, res, dy):
+    bm, bn, bk, interpret = cfg
+    xq, wq, sx, sw = res
+    # Recompute-based backward: both operands are int8 words (float0
+    # cotangents), so the only gradients are the two scales. The raw int32
+    # accumulator is regenerated by the forward kernel at unit scale.
+    acc = int8_matmul(xq, wq, jnp.float32(1.0), jnp.float32(1.0),
+                      bm=bm, bn=bn, bk=bk, interpret=interpret)
+    g0 = jnp.sum(dy.astype(jnp.float32) * acc)
+    dsx = (g0 * sw.astype(jnp.float32)).reshape(sx.shape).astype(sx.dtype)
+    dsw = (g0 * sx.astype(jnp.float32)).reshape(sw.shape).astype(sw.dtype)
+    return float0_like(xq), float0_like(wq), dsx, dsw
+
+
+_int8_matmul_diff.defvjp(_int8_matmul_diff_fwd, _int8_matmul_diff_bwd)
+
+
+def int8_matmul_vjp(xq: Array, wq: Array, sx: Array, sw: Array, *,
+                    bm: int = 256, bn: int = 256, bk: int = 512,
+                    interpret: bool = False) -> Array:
+    """Differentiable :func:`int8_matmul` (scale cotangents only; the int8
+    words are non-differentiable storage)."""
+    return _int8_matmul_diff((bm, bn, bk, interpret), xq, wq,
+                             jnp.asarray(sx, jnp.float32),
+                             jnp.asarray(sw, jnp.float32))

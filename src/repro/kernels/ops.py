@@ -173,8 +173,13 @@ def edf_ladder_hists(w: Array, fls: Array, r, *, wl_ladder: tuple,
 
 def fxp_matmul(x: Array, wq: Array, scale: Array, *, use_pallas: bool = False,
                bias: Array | None = None) -> Array:
+    """Differentiable on both paths: the Pallas route carries a custom VJP
+    whose backward matmuls are themselves Pallas kernels (dx streams the
+    same int8 weight tiles through a transposed index map; dw accumulates
+    xᵀ@dy in f32 VMEM scratch), so jax.grad never falls back to a
+    dequantized HBM weight copy."""
     if use_pallas:
-        out = _fm.fxp_matmul(x, wq, scale, interpret=not _on_tpu())
+        out = _fm.fxp_matmul_vjp(x, wq, scale, interpret=not _on_tpu())
         if bias is not None:
             out = out + bias
         return out
@@ -184,7 +189,7 @@ def fxp_matmul(x: Array, wq: Array, scale: Array, *, use_pallas: bool = False,
 def int8_matmul(xq: Array, wq: Array, sx: Array, sw: Array, *,
                 use_pallas: bool = False) -> Array:
     if use_pallas:
-        return _fm.int8_matmul(xq, wq, sx, sw, interpret=not _on_tpu())
+        return _fm.int8_matmul_vjp(xq, wq, sx, sw, interpret=not _on_tpu())
     return ref.ref_int8_matmul(xq, wq, sx, sw)
 
 
@@ -199,9 +204,15 @@ def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
               window: int = 0, softcap: float = 0.0,
               scale: float | None = None, use_pallas: bool = False,
               bq: int = 512, bk: int = 512) -> Array:
+    """Differentiable on both paths: the Pallas route carries a custom VJP
+    (forward stashes the per-row logsumexp; backward is the standard
+    recompute scheme as two more Pallas kernels, kernels/flash_attention
+    ``_flash_dq_kernel`` / ``_flash_dkv_kernel``), so the differentiated
+    training forward keeps the flash kernel instead of materializing the
+    (Sq × Skv) logits in XLA."""
     if use_pallas:
-        return _fa.flash_attention(q, k, v, causal=causal, window=window,
-                                   softcap=softcap, scale=scale, bq=bq, bk=bk,
-                                   interpret=not _on_tpu())
+        return _fa.flash_attention_vjp(q, k, v, causal=causal, window=window,
+                                       softcap=softcap, scale=scale,
+                                       bq=bq, bk=bk, interpret=not _on_tpu())
     return ref.ref_attention(q, k, v, causal=causal, window=window,
                              softcap=softcap, scale=scale)

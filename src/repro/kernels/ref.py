@@ -218,6 +218,79 @@ def ref_int8_matmul(xq: Array, wq: Array, sx: Array, sw: Array) -> Array:
     return acc.astype(jnp.float32) * sx.astype(jnp.float32) * sw.astype(jnp.float32)
 
 
+# ---------------------------------------------------------------------------
+# Backward-pass oracles (ground truth for the custom-VJP Pallas kernels —
+# tests/test_vjp_differential.py additionally checks against raw XLA
+# autodiff of the forward oracles, so these stay closed-form and readable).
+
+
+def ref_matmul_dx(dy: Array, wq: Array, scale: Array) -> Array:
+    """dx = dy @ (wq·scale)ᵀ, f32 accumulation, dy.dtype out."""
+    acc = jnp.dot(dy.astype(jnp.float32), wq.astype(jnp.float32).T,
+                  preferred_element_type=jnp.float32)
+    return (acc * scale.astype(jnp.float32)).astype(dy.dtype)
+
+
+def ref_matmul_dw(x: Array, dy: Array) -> Array:
+    """dw = xᵀ @ dy in f32."""
+    return jnp.dot(x.astype(jnp.float32).T, dy.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def ref_fxp_matmul_grads(x: Array, wq: Array, scale: Array, dy: Array):
+    """(dx, dscale) cotangents of ``ref_fxp_matmul`` (dwq is float0 —
+    the int8 words are non-differentiable storage)."""
+    dw = ref_matmul_dw(x, dy)
+    dscale = (jnp.sum(dw * wq.astype(jnp.float32))
+              .reshape(jnp.shape(scale)).astype(scale.dtype))
+    return ref_matmul_dx(dy, wq, scale).astype(x.dtype), dscale
+
+
+def ref_int8_matmul_grads(xq: Array, wq: Array, sx: Array, sw: Array,
+                          dy: Array):
+    """(dsx, dsw) cotangents of ``ref_int8_matmul``."""
+    acc = jax.lax.dot_general(
+        xq, wq, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32).astype(jnp.float32)
+    g0 = jnp.sum(dy.astype(jnp.float32) * acc)
+    return ((g0 * sw.astype(jnp.float32)).reshape(jnp.shape(sx)),
+            (g0 * sx.astype(jnp.float32)).reshape(jnp.shape(sw)))
+
+
+def ref_attention_lse(q: Array, k: Array, v: Array, *, causal: bool = True,
+                      window: int = 0, softcap: float = 0.0,
+                      scale: float | None = None) -> Array:
+    """Per-row logsumexp (B, H, Sq) of the masked (softcapped) logits —
+    the residual flash_attention(return_lse=True) stashes for its VJP."""
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+    sc = scale if scale is not None else (1.0 / D ** 0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * sc
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    return jax.scipy.special.logsumexp(logits, axis=-1)
+
+
+def ref_attention_grads(q: Array, k: Array, v: Array, dy: Array, **kwargs):
+    """(dq, dk, dv) via XLA autodiff of :func:`ref_attention` — the oracle
+    the Pallas backward kernels are pinned against."""
+    _, vjp = jax.vjp(lambda a, b, c: ref_attention(a, b, c, **kwargs),
+                     q, k, v)
+    return vjp(dy)
+
+
 def ref_kl_hist(w: Array, q: Array, num_bins: int) -> Array:
     """Fused double histogram: counts (2, num_bins) of w and q over w's range."""
     wf = w.astype(jnp.float32).reshape(-1)

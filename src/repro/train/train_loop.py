@@ -83,13 +83,16 @@ def _task_loss(cfg: Config, qparams, stats, batch, act_wl=None,
         targets, shift = batch["tokens"], True
     if m.cross_attn_every:
         kwargs["memory"] = batch["memory"]
-    # The forward here sits under value_and_grad, and the forward kernels
-    # (flash_attention / fxp_matmul) have no custom VJP yet — differentiating
-    # through pallas_call fails. quant.use_pallas therefore only routes the
-    # NON-differentiated precision machinery (quantize_params, PushDown) in
-    # training; serving (serve/engine.py, no grad) uses the forward kernels.
+    # This forward sits under value_and_grad; the forward kernels carry
+    # custom VJPs whose backward passes are themselves Pallas kernels
+    # (flash_attention._flash_dq/_dkv_kernel), so quant.use_pallas covers
+    # the differentiated train step too — not just the precision machinery.
+    # Remaining exclusions: dynamic-window attention slots (traced window →
+    # masked XLA path in attend_full), the CNN family's conv forward, and
+    # the dense layers (fxp_matmul's VJP exists but isn't wired into
+    # models/common.dense yet — ROADMAP).
     logits = transformer.forward(qparams, m, act_wl=act_wl,
-                                 use_pallas=False,
+                                 use_pallas=cfg.quant.use_pallas,
                                  remat=cfg.train.remat, **kwargs)
     return transformer.lm_loss(logits, targets, shift=shift), {"stats": stats}
 
