@@ -21,7 +21,11 @@ Hot spots, each measured XLA-reference vs fused-Pallas:
     fxp_matmul and flash attention, forward-only and value_and_grad, the
     Pallas custom-VJP route vs XLA autodiff of the jnp oracle. Structure
     facts recorded: the grad jaxpr contains the forward AND both backward
-    Pallas kernels (no silent XLA fallback under differentiation).
+    Pallas kernels (no silent XLA fallback under differentiation). Rows
+    cover block-aligned shapes AND prime/non-divisible ones (flagged
+    ``tail_masked``): the latter run tail-masked partial boundary blocks,
+    while aligned shapes trace to the unmasked kernels — comparing the
+    pairs pins the tail-mask overhead on aligned shapes at ~0.
 
 Besides wall times the run records the *structural* facts the perf claims
 rest on, read off the jaxprs (these hold on any backend):
@@ -38,6 +42,7 @@ the kernel op-by-op); they are recorded for trajectory only, flagged by
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import sys
 import time
@@ -47,6 +52,7 @@ import jax.numpy as jnp
 
 from repro import jaxpr_tools
 from repro.core import fixed_point as fxp, pushdown
+from repro.kernels import fxp_matmul as _fm
 from repro.kernels import ops
 
 SIZES = [(512, 512), (1024, 2048), (2048, 4096)]
@@ -251,10 +257,30 @@ def bench_switch(reps: int, sample: int = 65536) -> dict:
     }
 
 
-MATMUL_SIZES = [(512, 1024, 512), (1024, 2048, 1024)]
-MATMUL_SIZES_QUICK = [(128, 256, 128), (256, 512, 256)]
-ATTN_SIZES = [(2, 512, 8, 2, 64), (1, 1024, 8, 2, 64)]   # (B,S,H,Hkv,D)
-ATTN_SIZES_QUICK = [(1, 128, 4, 2, 32), (2, 256, 4, 2, 64)]
+# Aligned shapes tile the default blocks evenly (the masking helpers are
+# static no-ops — tail-mask overhead on these rows must stay ~0); the
+# prime/non-divisible shapes run tail-masked partial boundary blocks (the
+# shapes the pre-masking wrappers refused or blew up to whole-dim blocks).
+MATMUL_SIZES = [(512, 1024, 512), (1024, 2048, 1024), (509, 1031, 509)]
+MATMUL_SIZES_QUICK = [(128, 256, 128), (256, 512, 256), (300, 520, 260)]
+ATTN_SIZES = [(2, 512, 8, 2, 64), (1, 1024, 8, 2, 64),   # (B,S,H,Hkv,D)
+              (1, 509, 8, 2, 64)]
+ATTN_SIZES_QUICK = [(1, 128, 4, 2, 32), (2, 256, 4, 2, 64),
+                    (1, 300, 4, 2, 32)]
+
+# Blocks the fwd_bwd section runs with, used to label rows as tail-masked:
+# ops.fxp_matmul exposes no block args, so read the (bm, bn, bk) defaults
+# off fxp_matmul_vjp — the exact entry point ops.fxp_matmul dispatches to
+# under use_pallas — so label and execution can't drift.
+_MATMUL_BLOCKS = tuple(
+    inspect.signature(_fm.fxp_matmul_vjp).parameters[name].default
+    for name in ("bm", "bn", "bk"))
+_ATTN_BLOCK = 256                                         # bq = bk (passed)
+
+
+def _has_tail(dim: int, block: int) -> bool:
+    b = min(block, dim)
+    return dim % b != 0
 
 
 def _grad_structure(fn, *args) -> dict:
@@ -288,8 +314,11 @@ def bench_fwd_bwd(matmul_sizes, attn_sizes, reps: int) -> dict:
         g_xla = jax.jit(jax.value_and_grad(lambda v: fwd(v, False)))
         f_pal = jax.jit(lambda v: fwd(v, True))
         f_xla = jax.jit(lambda v: fwd(v, False))
+        bm, bn, bk = _MATMUL_BLOCKS
         row = {
             "shape": [m, k, n],
+            "tail_masked": (_has_tail(m, bm) or _has_tail(n, bn)
+                            or _has_tail(k, bk)),
             "xla_fwd_ms": _time(lambda: f_xla(x), reps=reps) * 1e3,
             "pallas_fwd_ms": _time(lambda: f_pal(x), reps=reps) * 1e3,
             "xla_fwd_bwd_ms": _time(lambda: g_xla(x), reps=reps) * 1e3,
@@ -297,7 +326,8 @@ def bench_fwd_bwd(matmul_sizes, attn_sizes, reps: int) -> dict:
             **_grad_structure(lambda v: fwd(v, True), x),
         }
         matmul_rows.append(row)
-        print(f"  matmul   {(m, k, n)}: fwd+bwd xla "
+        print(f"  matmul   {(m, k, n)}"
+              f"{' [tail]' if row['tail_masked'] else ''}: fwd+bwd xla "
               f"{row['xla_fwd_bwd_ms']:8.2f} ms | pallas "
               f"{row['pallas_fwd_bwd_ms']:8.2f} ms")
 
@@ -310,7 +340,7 @@ def bench_fwd_bwd(matmul_sizes, attn_sizes, reps: int) -> dict:
 
         def fwd(v, use_pallas):
             out = ops.attention(v, *kv, causal=True, use_pallas=use_pallas,
-                                bq=256, bk=256)
+                                bq=_ATTN_BLOCK, bk=_ATTN_BLOCK)
             return 0.5 * jnp.sum(out * out)
 
         def ref_fwd(v):
@@ -323,6 +353,7 @@ def bench_fwd_bwd(matmul_sizes, attn_sizes, reps: int) -> dict:
         f_xla = jax.jit(ref_fwd)
         row = {
             "shape": [B, S, H, Hkv, D],
+            "tail_masked": _has_tail(S, _ATTN_BLOCK),
             "xla_fwd_ms": _time(lambda: f_xla(q), reps=reps) * 1e3,
             "pallas_fwd_ms": _time(lambda: f_pal(q), reps=reps) * 1e3,
             "xla_fwd_bwd_ms": _time(lambda: g_xla(q), reps=reps) * 1e3,
@@ -330,7 +361,8 @@ def bench_fwd_bwd(matmul_sizes, attn_sizes, reps: int) -> dict:
             **_grad_structure(lambda v: fwd(v, True), q),
         }
         attn_rows.append(row)
-        print(f"  attn     {(B, S, H, Hkv, D)}: fwd+bwd xla "
+        print(f"  attn     {(B, S, H, Hkv, D)}"
+              f"{' [tail]' if row['tail_masked'] else ''}: fwd+bwd xla "
               f"{row['xla_fwd_bwd_ms']:8.2f} ms | pallas "
               f"{row['pallas_fwd_bwd_ms']:8.2f} ms")
     return {"matmul": matmul_rows, "attention": attn_rows}

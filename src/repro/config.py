@@ -128,6 +128,9 @@ class QuantConfig:
     #     transposed-index-map int8 weight streaming for dx, though the
     #     model's dense layers don't call them yet — ROADMAP), pinned by
     #     tests/test_vjp_differential.py.
+    # Any layer shape is eligible — primes included: the gridded kernels
+    # tail-mask partial boundary blocks in-register (no divisibility
+    # restriction, no whole-dim VMEM fallback; tests/test_tailmask.py).
     # Remaining exclusions: attention slots whose window arrives as a traced
     # scalar (masked XLA path), the CNN family's conv forward, and
     # unevenly-sharded / RTN-mode quantize leaves (controller._use_fused_prng).

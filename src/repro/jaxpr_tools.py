@@ -72,6 +72,25 @@ def count_pallas_calls(jaxpr, name_substr: str = "") -> int:
     return sum(name_substr in n for n in pallas_kernel_names(jaxpr))
 
 
+def pallas_grids(jaxpr):
+    """Grid tuple per pallas_call eqn (same order as ``pallas_eqns``).
+    Backs the VMEM-boundedness assertions: a tail-masked kernel on a
+    prime dim must show a MULTI-block grid (``pl.cdiv`` of the clamp),
+    never a whole-dim single block."""
+    return [tuple(eqn.params["grid_mapping"].grid)
+            for eqn in pallas_eqns(jaxpr)]
+
+
+def pallas_block_shapes(jaxpr):
+    """Per pallas_call eqn, each operand's block shape (inputs then
+    outputs, same order as ``pallas_eqns``). With tail masking the chosen
+    block must equal min(requested, dim) — reading it off the traced
+    program pins the no-whole-dim-fallback contract on any backend."""
+    return [[tuple(bm.block_shape) for bm in
+             eqn.params["grid_mapping"].block_mappings]
+            for eqn in pallas_eqns(jaxpr)]
+
+
 # Gather-shaped collectives whose param-sized outputs would mean the f32
 # master (or its quantized copy) is being reassembled across the mesh —
 # exactly what the shard_map-wrapped quantize exists to prevent. psum/

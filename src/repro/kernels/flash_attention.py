@@ -13,7 +13,12 @@ Features needed by the assigned archs, all fused:
   * logit softcapping   (gemma2: softcap · tanh(logits / softcap))
   * GQA via kv-head index mapping (no jnp.repeat materialization)
 
-Grid: (B, H, nq, nk), kv innermost ("arbitrary"), MXU-aligned q/kv blocks.
+Grid: (B, H, ⌈Sq/bq⌉, ⌈Skv/bk⌉), kv innermost ("arbitrary"). MXU-aligned
+q/kv blocks preferred but NOT required: non-divisible Sq/Skv produce
+partial boundary blocks whose garbage padding is tail-masked in-kernel —
+q/k tail lanes are NEG_INF in the score path (excluded from max/logsumexp
+and every backward contraction, via the shared ``_block_mask``) and the
+padded k/v/do lanes are zeroed before any MXU contraction.
 
 The forward optionally emits the per-row logsumexp (``return_lse``) — the
 residual the recompute-based backward (``flash_attention_vjp``) needs. The
@@ -34,7 +39,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import tpu_compiler_params
-from repro.kernels.fxp_matmul import _fit_block
+from repro.kernels.fxp_matmul import _clamp_block, _mask_tail
 
 Array = jax.Array
 
@@ -51,12 +56,22 @@ def _positions(iq: int, ik: int, bq: int, bk: int, q_offset: int):
 
 
 def _block_mask(iq, ik, *, bq: int, bk: int, causal: bool, window: int,
-                q_offset: int):
-    """The ONE causal/sliding-window mask both the forward and the
+                q_offset: int, sq: int, skv: int):
+    """The ONE causal/sliding-window/tail mask both the forward and the
     backward recompute share — any inclusivity change here stays
-    bit-identical across o, lse and dQ/dK/dV."""
+    bit-identical across o, lse and dQ/dK/dV.
+
+    ``sq``/``skv`` are the TRUE sequence extents: on boundary blocks of a
+    non-divisible grid the q/k tail lanes hold Pallas garbage padding, so
+    they are masked out of the score matrix (NEG_INF downstream — excluded
+    from the softmax max, the logsumexp, and every backward contraction).
+    Statically free when the grid tiles both dims evenly."""
     qpos, kpos = _positions(iq, ik, bq, bk, q_offset)
     mask = jnp.ones((bq, bk), jnp.bool_)
+    if sq % bq:
+        mask &= qpos - q_offset < sq          # q-tail rows of the block
+    if skv % bk:
+        mask &= kpos < skv                    # k-tail cols of the block
     if causal:
         mask &= kpos <= qpos
     if window > 0:
@@ -66,7 +81,8 @@ def _block_mask(iq, ik, *, bq: int, bk: int, causal: bool, window: int,
 
 def _flash_kernel(q_ref, k_ref, v_ref, *refs,
                   scale: float, causal: bool, window: int, softcap: float,
-                  bq: int, bk: int, nk: int, q_offset: int, with_lse: bool):
+                  bq: int, bk: int, nk: int, q_offset: int, sq: int,
+                  skv: int, with_lse: bool):
     if with_lse:
         o_ref, lse_ref, m_ref, l_ref, acc_ref = refs
     else:
@@ -80,8 +96,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, *refs,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
-    k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
-    v = v_ref[0, 0].astype(jnp.float32)          # (bk, D)
+    # kv tails: k garbage only reaches masked logit columns, but v rides
+    # p @ v where the masked p entries are exact zeros — 0·NaN = NaN, so
+    # both tails are zeroed before any contraction (no-ops when aligned).
+    k = _mask_tail(k_ref[0, 0].astype(jnp.float32), 0, ik, skv)   # (bk, D)
+    v = _mask_tail(v_ref[0, 0].astype(jnp.float32), 0, ik, skv)   # (bk, D)
 
     logits = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
@@ -90,7 +109,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, *refs,
         logits = softcap * jnp.tanh(logits / softcap)
 
     mask = _block_mask(iq, ik, bq=bq, bk=bk, causal=causal, window=window,
-                       q_offset=q_offset)
+                       q_offset=q_offset, sq=sq, skv=skv)
     logits = jnp.where(mask, logits, NEG_INF)
 
     m_prev, l_prev = m_ref[...], l_ref[...]
@@ -136,13 +155,18 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     all (Sq > Skv under causal alignment) are exactly 0 with lse = NEG_INF
     — flash convention, and what the VJP assumes (ref_attention instead
     softmaxes the all-masked row into a uniform average).
+
+    Any Sq/Skv is accepted: bq/bk are clamped (never widened to a
+    whole-dim block) and partial boundary blocks are tail-masked
+    in-kernel, so grids stay multi-block with VMEM bounded by the
+    requested blocks even for prime sequence lengths.
     """
     B, Sq, H, D = q.shape
     _, Skv, Hkv, _ = k.shape
     rep = H // Hkv
     sc = scale if scale is not None else (1.0 / D ** 0.5)
-    bq = _fit_block(bq, Sq)
-    bk = _fit_block(bk, Skv)
+    bq = _clamp_block(bq, Sq)
+    bk = _clamp_block(bk, Skv)
     nq, nk = pl.cdiv(Sq, bq), pl.cdiv(Skv, bk)
 
     qt = q.transpose(0, 2, 1, 3)                  # (B, H, Sq, D)
@@ -152,7 +176,7 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     kernel = functools.partial(
         _flash_kernel, scale=sc, causal=causal, window=window,
         softcap=softcap, bq=bq, bk=bk, nk=nk, q_offset=Skv - Sq,
-        with_lse=return_lse)
+        sq=Sq, skv=Skv, with_lse=return_lse)
 
     out_shape = [jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype)]
     out_specs = [pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0))]
@@ -191,17 +215,20 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
 
 
 def _block_probs(q, k, lse, iq, ik, *, scale, causal, window, softcap,
-                 bq, bk, q_offset):
+                 bq, bk, q_offset, sq, skv):
     """Recompute the (bq, bk) probability block p = exp(t − lse) from the
     stashed logsumexp, plus the pre-mask softcapped logits t (needed for
-    the tanh chain). Masked entries are exactly 0 (no NEG_INF arithmetic,
-    so fully-masked rows can't poison the accumulators with inf·0)."""
+    the tanh chain). Masked entries — including q/k tail lanes of partial
+    boundary blocks — are exactly 0 (no NEG_INF arithmetic, so fully-
+    masked rows can't poison the accumulators with inf·0). Callers must
+    hand in tail-sanitized q/k so t itself stays finite (the softcap tanh
+    chain multiplies by (1 − (t/cap)²) AFTER the p zeros are in place)."""
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale
     t = softcap * jnp.tanh(s / softcap) if softcap > 0.0 else s
     mask = _block_mask(iq, ik, bq=bq, bk=bk, causal=causal, window=window,
-                       q_offset=q_offset)
+                       q_offset=q_offset, sq=sq, skv=skv)
     p = jnp.where(mask, jnp.exp(t - lse[:, None]), 0.0)
     return p, t
 
@@ -218,35 +245,42 @@ def _grad_wrt_logits(p, dp, delta, t, *, softcap):
 def _flash_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, dq_ref,
                      acc_ref, *, scale: float, causal: bool,
                      window: int, softcap: float, bq: int, bk: int, nk: int,
-                     q_offset: int):
+                     q_offset: int, sq: int, skv: int):
     iq, ik = pl.program_id(2), pl.program_id(3)
 
     @pl.when(ik == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)
-    k = k_ref[0, 0].astype(jnp.float32)
-    v = v_ref[0, 0].astype(jnp.float32)
-    do = do_ref[0, 0].astype(jnp.float32)
+    # Tail-sanitize every streamed operand (static no-ops when aligned):
+    # the masked p/g entries are exact zeros, but g @ k and do @ vᵀ still
+    # touch the garbage k/v tail lanes (0·NaN = NaN), and q/do/delta tails
+    # keep t and dp finite so the softcap chain can't reintroduce NaNs.
+    q = _mask_tail(q_ref[0, 0].astype(jnp.float32), 0, iq, sq)
+    k = _mask_tail(k_ref[0, 0].astype(jnp.float32), 0, ik, skv)
+    v = _mask_tail(v_ref[0, 0].astype(jnp.float32), 0, ik, skv)
+    do = _mask_tail(do_ref[0, 0].astype(jnp.float32), 0, iq, sq)
+    delta = _mask_tail(d_ref[0, 0][:, None], 0, iq, sq)
     p, t = _block_probs(q, k, lse_ref[0, 0], iq, ik, scale=scale,
                         causal=causal, window=window, softcap=softcap,
-                        bq=bq, bk=bk, q_offset=q_offset)
+                        bq=bq, bk=bk, q_offset=q_offset, sq=sq, skv=skv)
     dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
-    g = _grad_wrt_logits(p, dp, d_ref[0, 0][:, None], t, softcap=softcap)
+    g = _grad_wrt_logits(p, dp, delta, t, softcap=softcap)
     acc_ref[...] += jax.lax.dot_general(
         g, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
     @pl.when(ik == nk - 1)
     def _done():
-        dq_ref[0, 0] = (acc_ref[...] * scale).astype(dq_ref.dtype)
+        dq_ref[0, 0] = _mask_tail(acc_ref[...] * scale, 0, iq,
+                                  sq).astype(dq_ref.dtype)
 
 
 def _flash_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref,
                       dk_ref, dv_ref, dk_acc, dv_acc, *, scale: float,
                       causal: bool, window: int, softcap: float, bq: int,
-                      bk: int, nq: int, nj: int, q_offset: int):
+                      bk: int, nq: int, nj: int, q_offset: int, sq: int,
+                      skv: int):
     # Grid dim 3 runs (rep · nq) steps head-major: j = r·nq + iq. The rep
     # query heads of the GQA group fold into the SAME (bk, D) accumulators,
     # so the kernel writes the group-summed dK/dV tiles directly — never a
@@ -259,14 +293,18 @@ def _flash_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref,
         dk_acc[...] = jnp.zeros_like(dk_acc)
         dv_acc[...] = jnp.zeros_like(dv_acc)
 
-    q = q_ref[0, 0].astype(jnp.float32)
-    k = k_ref[0, 0].astype(jnp.float32)
-    v = v_ref[0, 0].astype(jnp.float32)
-    do = do_ref[0, 0].astype(jnp.float32)
-    delta = d_ref[0, 0][:, None]
+    # Here BOTH contractions run over the q rows (pᵀ @ do, gᵀ @ q), so the
+    # q/do/delta tails must be exact zeros — and the k/v tails likewise,
+    # or the masked-p zeros meet garbage through dp (0·NaN = NaN). All
+    # static no-ops on aligned grids.
+    q = _mask_tail(q_ref[0, 0].astype(jnp.float32), 0, iq, sq)
+    k = _mask_tail(k_ref[0, 0].astype(jnp.float32), 0, ik, skv)
+    v = _mask_tail(v_ref[0, 0].astype(jnp.float32), 0, ik, skv)
+    do = _mask_tail(do_ref[0, 0].astype(jnp.float32), 0, iq, sq)
+    delta = _mask_tail(d_ref[0, 0][:, None], 0, iq, sq)
     p, t = _block_probs(q, k, lse_ref[0, 0], iq, ik, scale=scale,
                         causal=causal, window=window, softcap=softcap,
-                        bq=bq, bk=bk, q_offset=q_offset)
+                        bq=bq, bk=bk, q_offset=q_offset, sq=sq, skv=skv)
     dv_acc[...] += jax.lax.dot_general(
         p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
     dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
@@ -277,6 +315,9 @@ def _flash_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref,
 
     @pl.when(j == nj - 1)
     def _done():
+        # kv-tail rows of the accumulators are exact zeros by construction
+        # (every contribution above is tail-masked), so the boundary write
+        # is already zero-filled.
         dk_ref[0, 0] = dk_acc[...] * scale
         dv_ref[0, 0] = dv_acc[...]
 
@@ -300,8 +341,8 @@ def flash_attention_bwd(q: Array, k: Array, v: Array, o: Array, lse: Array,
     _, Skv, Hkv, _ = k.shape
     rep = H // Hkv
     sc = scale if scale is not None else (1.0 / D ** 0.5)
-    bq = _fit_block(bq, Sq)
-    bk = _fit_block(bk, Skv)
+    bq = _clamp_block(bq, Sq)
+    bk = _clamp_block(bk, Skv)
     nq, nk = pl.cdiv(Sq, bq), pl.cdiv(Skv, bk)
 
     qt = q.transpose(0, 2, 1, 3)
@@ -317,7 +358,7 @@ def flash_attention_bwd(q: Array, k: Array, v: Array, o: Array, lse: Array,
     dq = pl.pallas_call(
         functools.partial(_flash_dq_kernel, scale=sc, causal=causal,
                           window=window, softcap=softcap, bq=bq, bk=bk,
-                          nk=nk, q_offset=Skv - Sq),
+                          nk=nk, q_offset=Skv - Sq, sq=Sq, skv=Skv),
         grid=(B, H, nq, nk),
         in_specs=[
             qspec,
@@ -351,7 +392,8 @@ def flash_attention_bwd(q: Array, k: Array, v: Array, o: Array, lse: Array,
     dk, dv = pl.pallas_call(
         functools.partial(_flash_dkv_kernel, scale=sc, causal=causal,
                           window=window, softcap=softcap, bq=bq, bk=bk,
-                          nq=nq, nj=nq * rep, q_offset=Skv - Sq),
+                          nq=nq, nj=nq * rep, q_offset=Skv - Sq,
+                          sq=Sq, skv=Skv),
         grid=(B, Hkv, nk, nq * rep),
         in_specs=[qjspec, kvjspec, kvjspec, qjspec, ljspec, ljspec],
         out_specs=[dkv_out, dkv_out],

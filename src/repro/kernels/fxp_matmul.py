@@ -8,8 +8,11 @@ copy of the weights in HBM every step; this kernel streams int8 weight tiles
 into VMEM (4× less HBM traffic than f32, 2× less than bf16) and dequantizes
 in-register on the way into the MXU.
 
-Block scheme: grid (M/bm, N/bn, K/bk), K innermost so the f32 accumulator
-tile lives in a VMEM scratch across the K loop; MXU-aligned 128-multiples.
+Block scheme: grid (⌈M/bm⌉, ⌈N/bn⌉, ⌈K/bk⌉), K innermost so the f32
+accumulator tile lives in a VMEM scratch across the K loop; MXU-aligned
+128-multiples preferred but NOT required — partial boundary blocks are
+tail-masked in-kernel (``_mask_tail``: Pallas pads them with garbage/NaN),
+so any ⟨M,K,N⟩ runs with the requested block clamp and bounded VMEM.
 
 A full-integer variant (``int8_matmul``) takes int8 activations too and
 accumulates in int32 — the v5e MXU's 2× int8 throughput path; used for
@@ -45,20 +48,30 @@ from repro.kernels._compat import tpu_compiler_params
 Array = jax.Array
 
 
-def _fit_block(b: int, d: int) -> int:
-    """Largest usable block ≤ b that tiles d EVENLY. Pallas pads partial
-    boundary blocks with garbage/NaN rather than zeros in interpret mode,
-    so a block size that does not divide the dim would silently poison the
-    accumulation; every wrapper here therefore refuses to create partial
-    blocks. Preference order: the requested b, else the largest divisor of
-    d that is ≤ b (keeps VMEM bounded for large non-aligned dims), else —
-    when d is so prime-ish the best divisor is a degenerate sliver — the
-    whole dim as one block."""
-    b = min(b, d)
-    if d % b == 0:
-        return b
-    best = max(c for c in range(1, b + 1) if d % c == 0)
-    return best if best >= max(8, b // 8) else d
+def _clamp_block(b: int, d: int) -> int:
+    """Block size for a dim of true extent d: the requested b, clamped.
+    Non-divisible boundaries are fine — every gridded kernel here
+    tail-masks its padded lanes in-register (Pallas pads partial boundary
+    blocks with garbage/NaN, and out-of-range boundary writes are
+    dropped), so grids stay ``pl.cdiv`` with VMEM bounded by the
+    *requested* block for ANY dim, primes included. O(1): the old
+    divisor-scan fallback (largest divisor ≤ b, else the whole dim — a
+    VMEM hazard for large prime-ish dims) is gone."""
+    return min(b, d)
+
+
+def _mask_tail(x: Array, axis: int, pid, dim: int) -> Array:
+    """Zero the garbage-padding tail of a boundary block along ``axis``.
+
+    ``dim`` is the true (unpadded) extent of the axis; the block extent is
+    read off ``x`` itself and ``pid`` is the grid index along that axis.
+    Statically a no-op when the grid tiles ``dim`` evenly, so aligned
+    shapes trace to exactly the unmasked kernel (zero overhead)."""
+    b = x.shape[axis]
+    if dim % b == 0:
+        return x
+    idx = b * pid + jax.lax.broadcasted_iota(jnp.int32, x.shape, axis)
+    return jnp.where(idx < dim, x, jnp.zeros_like(x))
 
 
 def float0_like(x: Array) -> np.ndarray:
@@ -67,19 +80,30 @@ def float0_like(x: Array) -> np.ndarray:
     return np.zeros(x.shape, dtype=jax.dtypes.float0)
 
 
-def _fxp_matmul_kernel(x_ref, w_ref, scale_ref, o_ref, acc_ref, *, nk: int):
-    @pl.when(pl.program_id(2) == 0)
+def _fxp_matmul_kernel(x_ref, w_ref, scale_ref, o_ref, acc_ref, *, nk: int,
+                       dims: tuple):
+    M, K, N = dims
+    i, j, ik = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...].astype(jnp.float32)
-    w = w_ref[...].astype(jnp.float32)          # int8 -> f32 in-register
+    # K is contracted: garbage in EITHER operand's K tail would poison
+    # every output element (0·NaN = NaN), so both tails go to exact zero.
+    x = _mask_tail(x_ref[...].astype(jnp.float32), 1, ik, K)
+    w = _mask_tail(w_ref[...].astype(jnp.float32), 0, ik, K)
     acc_ref[...] += jax.lax.dot_general(
         x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
-    @pl.when(pl.program_id(2) == nk - 1)
+    @pl.when(ik == nk - 1)
     def _done():
-        o_ref[...] = (acc_ref[...] * scale_ref[0, 0]).astype(o_ref.dtype)
+        # M/N tails only pollute out-of-range output lanes (dropped on the
+        # boundary write) — zero-fill them anyway so the block never holds
+        # garbage.
+        out = acc_ref[...] * scale_ref[0, 0]
+        out = _mask_tail(_mask_tail(out, 0, i, M), 1, j, N)
+        o_ref[...] = out.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
@@ -87,14 +111,19 @@ def _fxp_matmul_kernel(x_ref, w_ref, scale_ref, o_ref, acc_ref, *, nk: int):
 def fxp_matmul(x: Array, wq: Array, scale: Array, *, bm: int = 256,
                bn: int = 256, bk: int = 512, out_dtype=None,
                interpret: bool = False) -> Array:
-    """y = x @ (wq * scale).  x: (M,K) float; wq: (K,N) int8; scale: () f32."""
+    """y = x @ (wq * scale).  x: (M,K) float; wq: (K,N) int8; scale: () f32.
+
+    Any ⟨M,K,N⟩ is accepted (primes included): partial boundary blocks are
+    tail-masked in-kernel, so blocks stay the requested clamp and VMEM
+    stays bounded."""
     M, K = x.shape
     K2, N = wq.shape
     assert K == K2, (x.shape, wq.shape)
     out_dtype = out_dtype or x.dtype
-    bm, bn, bk = _fit_block(bm, M), _fit_block(bn, N), _fit_block(bk, K)
+    bm, bn, bk = _clamp_block(bm, M), _clamp_block(bn, N), _clamp_block(bk, K)
     grid = (pl.cdiv(M, bm), pl.cdiv(N, bn), pl.cdiv(K, bk))
-    kernel = functools.partial(_fxp_matmul_kernel, nk=grid[2])
+    kernel = functools.partial(_fxp_matmul_kernel, nk=grid[2],
+                               dims=(M, K, N))
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -112,30 +141,42 @@ def fxp_matmul(x: Array, wq: Array, scale: Array, *, bm: int = 256,
     )(x, wq, scale.reshape(1, 1).astype(jnp.float32))
 
 
-def _int8_matmul_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk: int):
-    @pl.when(pl.program_id(2) == 0)
+def _int8_matmul_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk: int,
+                        dims: tuple):
+    M, K, N = dims
+    i, j, ik = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    # int8 padding is arbitrary garbage words — zero both K tails so the
+    # int32 accumulation over the tail is exactly 0.
+    x = _mask_tail(x_ref[...], 1, ik, K)
+    w = _mask_tail(w_ref[...], 0, ik, K)
     acc_ref[...] += jax.lax.dot_general(
-        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        x, w, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32)
 
-    @pl.when(pl.program_id(2) == nk - 1)
+    @pl.when(ik == nk - 1)
     def _done():
-        o_ref[...] = (acc_ref[...].astype(jnp.float32)
-                      * s_ref[0, 0]).astype(o_ref.dtype)
+        out = acc_ref[...].astype(jnp.float32) * s_ref[0, 0]
+        out = _mask_tail(_mask_tail(out, 0, i, M), 1, j, N)
+        o_ref[...] = out.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def int8_matmul(xq: Array, wq: Array, sx: Array, sw: Array, *, bm: int = 256,
                 bn: int = 256, bk: int = 512, interpret: bool = False) -> Array:
-    """W8A8 path: (xq @ wq) * (sx*sw); int32 MXU accumulation, f32 out."""
+    """W8A8 path: (xq @ wq) * (sx*sw); int32 MXU accumulation, f32 out.
+    Accepts any ⟨M,K,N⟩ — partial boundary blocks are tail-masked."""
     M, K = xq.shape
-    _, N = wq.shape
-    bm, bn, bk = _fit_block(bm, M), _fit_block(bn, N), _fit_block(bk, K)
+    K2, N = wq.shape
+    assert K == K2, (xq.shape, wq.shape)
+    bm, bn, bk = _clamp_block(bm, M), _clamp_block(bn, N), _clamp_block(bk, K)
     grid = (pl.cdiv(M, bm), pl.cdiv(N, bn), pl.cdiv(K, bk))
-    kernel = functools.partial(_int8_matmul_kernel, nk=grid[2])
+    kernel = functools.partial(_int8_matmul_kernel, nk=grid[2],
+                               dims=(M, K, N))
     s = (sx.astype(jnp.float32) * sw.astype(jnp.float32)).reshape(1, 1)
     return pl.pallas_call(
         kernel,
@@ -158,22 +199,29 @@ def int8_matmul(xq: Array, wq: Array, sx: Array, sw: Array, *, bm: int = 256,
 # Backward kernels
 
 
-def _matmul_dx_kernel(dy_ref, w_ref, scale_ref, dx_ref, acc_ref, *, nn: int):
+def _matmul_dx_kernel(dy_ref, w_ref, scale_ref, dx_ref, acc_ref, *, nn: int,
+                      dims: tuple):
     """dx tile = Σ_n dy(i,n) @ w(j,n)ᵀ — the weight tile is the forward's
     int8 (K,N) array read through a transposed index map, dequantized
     in-register; no transposed/dequantized weight copy ever exists in HBM."""
-    @pl.when(pl.program_id(2) == 0)
+    M, K, N = dims
+    i, j, n = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(n == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    dy = dy_ref[...].astype(jnp.float32)
-    w = w_ref[...].astype(jnp.float32)           # int8 -> f32 in-register
+    # N is the contracted dim here — zero both N tails before the MXU.
+    dy = _mask_tail(dy_ref[...].astype(jnp.float32), 1, n, N)
+    w = _mask_tail(w_ref[...].astype(jnp.float32), 1, n, N)
     acc_ref[...] += jax.lax.dot_general(
         dy, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
 
-    @pl.when(pl.program_id(2) == nn - 1)
+    @pl.when(n == nn - 1)
     def _done():
-        dx_ref[...] = (acc_ref[...] * scale_ref[0, 0]).astype(dx_ref.dtype)
+        out = acc_ref[...] * scale_ref[0, 0]
+        out = _mask_tail(_mask_tail(out, 0, i, M), 1, j, K)
+        dx_ref[...] = out.astype(dx_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
@@ -186,9 +234,10 @@ def matmul_dx(dy: Array, wq: Array, scale: Array, *, bm: int = 256,
     K, N2 = wq.shape
     assert N == N2, (dy.shape, wq.shape)
     out_dtype = out_dtype or dy.dtype
-    bm, bk, bn = _fit_block(bm, M), _fit_block(bk, K), _fit_block(bn, N)
+    bm, bk, bn = _clamp_block(bm, M), _clamp_block(bk, K), _clamp_block(bn, N)
     grid = (pl.cdiv(M, bm), pl.cdiv(K, bk), pl.cdiv(N, bn))
-    kernel = functools.partial(_matmul_dx_kernel, nn=grid[2])
+    kernel = functools.partial(_matmul_dx_kernel, nn=grid[2],
+                               dims=(M, K, N))
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -206,19 +255,24 @@ def matmul_dx(dy: Array, wq: Array, scale: Array, *, bm: int = 256,
     )(dy, wq, scale.reshape(1, 1).astype(jnp.float32))
 
 
-def _matmul_dw_kernel(x_ref, dy_ref, dw_ref, acc_ref, *, nm: int):
-    @pl.when(pl.program_id(2) == 0)
+def _matmul_dw_kernel(x_ref, dy_ref, dw_ref, acc_ref, *, nm: int,
+                      dims: tuple):
+    M, K, N = dims
+    i, j, m = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(m == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...].astype(jnp.float32)
-    dy = dy_ref[...].astype(jnp.float32)
+    # M is the contracted dim here — zero both M tails before the MXU.
+    x = _mask_tail(x_ref[...].astype(jnp.float32), 0, m, M)
+    dy = _mask_tail(dy_ref[...].astype(jnp.float32), 0, m, M)
     acc_ref[...] += jax.lax.dot_general(
         x, dy, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
-    @pl.when(pl.program_id(2) == nm - 1)
+    @pl.when(m == nm - 1)
     def _done():
-        dw_ref[...] = acc_ref[...]
+        dw_ref[...] = _mask_tail(_mask_tail(acc_ref[...], 0, i, K), 1, j, N)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
@@ -229,9 +283,10 @@ def matmul_dw(x: Array, dy: Array, *, bm: int = 256, bn: int = 256,
     M, K = x.shape
     M2, N = dy.shape
     assert M == M2, (x.shape, dy.shape)
-    bk, bn, bm = _fit_block(bk, K), _fit_block(bn, N), _fit_block(bm, M)
+    bk, bn, bm = _clamp_block(bk, K), _clamp_block(bn, N), _clamp_block(bm, M)
     grid = (pl.cdiv(K, bk), pl.cdiv(N, bn), pl.cdiv(M, bm))
-    kernel = functools.partial(_matmul_dw_kernel, nm=grid[2])
+    kernel = functools.partial(_matmul_dw_kernel, nm=grid[2],
+                               dims=(M, K, N))
     return pl.pallas_call(
         kernel,
         grid=grid,

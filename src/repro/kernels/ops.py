@@ -177,7 +177,16 @@ def fxp_matmul(x: Array, wq: Array, scale: Array, *, use_pallas: bool = False,
     whose backward matmuls are themselves Pallas kernels (dx streams the
     same int8 weight tiles through a transposed index map; dw accumulates
     xᵀ@dy in f32 VMEM scratch), so jax.grad never falls back to a
-    dequantized HBM weight copy."""
+    dequantized HBM weight copy.
+
+    Masking contract: ANY ⟨M,K,N⟩ is accepted — primes included. Blocks
+    are the requested size clamped to the dim (never a whole-dim
+    fallback), grids are ``pl.cdiv``, and partial boundary blocks are
+    correct by construction: the forward and both backward kernels zero
+    the contracted-dim tail lanes in-register before each MXU
+    accumulation and zero-fill the valid slice on boundary writes
+    (Pallas pads partial blocks with garbage/NaN). Aligned shapes trace
+    to the exact unmasked kernels, so the masking is free there."""
     if use_pallas:
         out = _fm.fxp_matmul_vjp(x, wq, scale, interpret=not _on_tpu())
         if bias is not None:
@@ -209,7 +218,18 @@ def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     recompute scheme as two more Pallas kernels, kernels/flash_attention
     ``_flash_dq_kernel`` / ``_flash_dkv_kernel``), so the differentiated
     training forward keeps the flash kernel instead of materializing the
-    (Sq × Skv) logits in XLA."""
+    (Sq × Skv) logits in XLA.
+
+    Masking contract: ANY Sq/Skv is accepted — primes included. bq/bk are
+    clamped (never widened to the whole sequence), grids stay ``pl.cdiv``
+    multi-block, and the garbage padding of partial boundary blocks is
+    tail-masked inside all three kernels: q/k tail lanes read NEG_INF in
+    the score path (excluded from the softmax max, the logsumexp and the
+    per-row D), padded k/v/do lanes are zeroed before every MXU
+    contraction, and boundary writes carry zeros in the padding lanes.
+    Aligned shapes trace to the exact unmasked kernels (zero overhead);
+    causal/window/GQA masking composes with the tail mask through the one
+    shared ``_block_mask``."""
     if use_pallas:
         return _fa.flash_attention_vjp(q, k, v, causal=causal, window=window,
                                        softcap=softcap, scale=scale,

@@ -45,7 +45,10 @@ def test_sr_quantize_on_grid():
 
 
 @pytest.mark.parametrize("m,k,n", [(8, 16, 8), (64, 128, 96), (100, 70, 50),
-                                   (256, 512, 256)])
+                                   (256, 512, 256),
+                                   # primes past the default blocks: partial
+                                   # boundary blocks on M and K, tail-masked
+                                   (509, 1031, 127)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_fxp_matmul_matches_ref(m, k, n, dtype):
     k1, k2 = jax.random.split(KEY)
@@ -60,7 +63,8 @@ def test_fxp_matmul_matches_ref(m, k, n, dtype):
                                atol=1e-2)
 
 
-@pytest.mark.parametrize("m,k,n", [(16, 32, 16), (128, 256, 128), (48, 72, 36)])
+@pytest.mark.parametrize("m,k,n", [(16, 32, 16), (128, 256, 128), (48, 72, 36),
+                                   (509, 1031, 127)])
 def test_int8_matmul_matches_ref(m, k, n):
     k1, k2 = jax.random.split(KEY)
     xq = jax.random.randint(k1, (m, k), -128, 128, jnp.int8)
@@ -101,7 +105,10 @@ def test_kl_hist_matches_ref(n, bins):
 # flash attention
 
 
-@pytest.mark.parametrize("sq,skv", [(128, 128), (64, 128), (1, 128), (96, 96)])
+@pytest.mark.parametrize("sq,skv", [(128, 128), (64, 128), (1, 128), (96, 96),
+                                    # prime seq dims: partial boundary
+                                    # blocks in both grid dims (bq=bk=32)
+                                    (127, 127), (131, 257)])
 @pytest.mark.parametrize("h,hkv", [(4, 4), (8, 2)])
 def test_flash_attention_matches_ref(sq, skv, h, hkv):
     k1, k2, k3 = jax.random.split(KEY, 3)

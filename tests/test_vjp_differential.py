@@ -58,7 +58,8 @@ def _words(key, shape, wl):
 
 @pytest.mark.parametrize("wl,fl", [(2, 0), (4, 2), (5, 3), (8, 4), (8, 7),
                                    (8, -2)])
-@pytest.mark.parametrize("m,k,n", [(16, 32, 16), (37, 53, 29), (100, 70, 50)])
+@pytest.mark.parametrize("m,k,n", [(16, 32, 16), (37, 53, 29), (100, 70, 50),
+                                   (127, 257, 131)])
 def test_fxp_matmul_grad_parity(m, k, n, wl, fl):
     k1, k2, k3 = jax.random.split(jax.random.fold_in(KEY, wl * 31 + fl), 3)
     x = jax.random.normal(k1, (m, k), jnp.float32)
@@ -185,9 +186,11 @@ def test_attention_grad_parity(b, h, hkv, kw):
         _close(a, b_, msg=f"d{name} {kw}")
 
 
-@pytest.mark.parametrize("sq,skv", [(64, 128), (32, 96), (96, 96)])
+@pytest.mark.parametrize("sq,skv", [(64, 128), (32, 96), (96, 96),
+                                    (61, 131), (131, 257)])
 def test_attention_grad_parity_prefill_offset(sq, skv):
-    """Sq ≠ Skv: query positions end-aligned to the key space."""
+    """Sq ≠ Skv: query positions end-aligned to the key space. The prime
+    rows run partial tail-masked boundary blocks in both grid dims."""
     k1, k2, k3, k4 = jax.random.split(jax.random.fold_in(KEY, sq + skv), 4)
     q = jax.random.normal(k1, (2, sq, 4, 32), jnp.float32)
     k = jax.random.normal(k2, (2, skv, 2, 32), jnp.float32)
@@ -234,7 +237,8 @@ def test_attention_grad_parity_dead_rows():
 
 
 def test_attention_grad_parity_odd_dims():
-    """Odd / non-tile-aligned Sq, Skv and head dim (single-block clamp)."""
+    """Odd / non-tile-aligned Sq, Skv and head dim (45 % 32 ≠ 0: the
+    boundary blocks are partial and tail-masked)."""
     k1, k2, k3, k4 = jax.random.split(KEY, 4)
     q = jax.random.normal(k1, (1, 45, 3, 24), jnp.float32)
     k = jax.random.normal(k2, (1, 45, 3, 24), jnp.float32)
