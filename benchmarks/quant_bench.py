@@ -17,6 +17,10 @@ Hot spots, each measured XLA-reference vs fused-Pallas:
   * ``switch`` — PushDown's EDF ladder (alg. 3). Baseline: 18 vmapped
     quantize probes + 36 scatter-add histograms. Fused: one
     ``edf_ladder_hists`` launch + KL/argmin epilogue.
+  * ``train_step`` — the END-TO-END jitted tiny-config train step across
+    the dense-dispatch regimes (pure XLA / PR-4 flash-only / packed words
+    into the fxp kernels / quantize-in-prologue), with per-variant jaxpr
+    structure facts — the HBM-round-trip win is measured, not asserted.
   * ``fwd_bwd`` (``--skip-fwd-bwd`` to omit) — the DIFFERENTIATED forward:
     fxp_matmul and flash attention, forward-only and value_and_grad, the
     Pallas custom-VJP route vs XLA autodiff of the jnp oracle. Structure
@@ -368,6 +372,69 @@ def bench_fwd_bwd(matmul_sizes, attn_sizes, reps: int) -> dict:
     return {"matmul": matmul_rows, "attention": attn_rows}
 
 
+def bench_train_step(reps: int) -> dict:
+    """END-TO-END jitted train step on the tiny config, the measurement
+    behind the dense-wiring claim: with container_dtype="int8_packed" +
+    use_pallas the model's dense layers consume quantized words directly
+    (fwd + dx + dw Pallas per layer, zero dequantized-weight XLA matmuls),
+    and dense_prologue additionally drops the q8 HBM round trip (the
+    sr-quantize launches for dense leaves disappear — words are drawn in
+    the matmul prologue). Variants:
+
+      * xla                — use_pallas off (pure XLA reference)
+      * pr4_flash_only     — use_pallas on, float32 container: the PR 4
+                             state (flash kernels, dense layers still XLA
+                             on a dequantized HBM copy)
+      * dense_materialized — packed words streamed into the fxp kernels
+      * dense_prologue     — quantize fused into the matmul prologue
+
+    Structure facts per variant are read off the traced step."""
+    import dataclasses
+    from repro.config import load_config
+    from repro.train import train_loop
+
+    variants = {
+        "xla": (False, False, "int8_packed"),
+        "pr4_flash_only": (True, False, "float32"),
+        "dense_materialized": (True, False, "int8_packed"),
+        "dense_prologue": (True, True, "int8_packed"),
+    }
+    rows = {}
+    for name, (use_pallas, prologue, container) in variants.items():
+        cfg = load_config("tiny", overrides=[
+            f"quant.container_dtype={container}", "quant.max_wl=8",
+            "quant.init_wl=8", "quant.init_fl=4"])
+        cfg = dataclasses.replace(
+            cfg,
+            quant=dataclasses.replace(cfg.quant, use_pallas=use_pallas,
+                                      dense_prologue=prologue),
+            train=dataclasses.replace(cfg.train, adapt_interval=1000))
+        state = train_loop.init_state(cfg)
+        batch = train_loop.make_batch(cfg, 0)
+        step = jax.jit(train_loop.make_train_step(cfg))
+        t = _time(lambda: step(state, batch)[1]["loss"], reps=reps)
+        jaxpr = jax.make_jaxpr(train_loop.make_train_step(cfg))(
+            state, batch).jaxpr
+        cnt = lambda s: jaxpr_tools.count_pallas_calls(jaxpr, s)
+        rows[name] = {
+            "step_ms": t * 1e3,
+            "dense_pallas_fwd": cnt("_fxp_matmul_kernel")
+                + cnt("_fxp_qmatmul_kernel"),
+            "dense_pallas_dx": cnt("_matmul_dx_kernel")
+                + cnt("_matmul_qdx_kernel"),
+            "dense_pallas_dw": cnt("_matmul_dw_kernel"),
+            # q8-materializing quantize launches (prologue drops the
+            # dense-leaf ones; the embed table keeps its own)
+            "sr_quantize_launches": cnt("_sr_fused"),
+        }
+        print(f"  train_step {name:20s}: {t * 1e3:8.2f} ms | "
+              f"dense fwd/dx/dw {rows[name]['dense_pallas_fwd']}/"
+              f"{rows[name]['dense_pallas_dx']}/"
+              f"{rows[name]['dense_pallas_dw']} | "
+              f"sr-launches {rows[name]['sr_quantize_launches']}")
+    return rows
+
+
 def run(quick: bool = False, out: str = "BENCH_quant.json",
         skip_fwd_bwd: bool = False) -> dict:
     print("\n== Precision-machinery microbenchmark ==")
@@ -389,6 +456,7 @@ def run(quick: bool = False, out: str = "BENCH_quant.json",
                     bench_fwd_bwd(
                         MATMUL_SIZES_QUICK if quick else MATMUL_SIZES,
                         ATTN_SIZES_QUICK if quick else ATTN_SIZES, reps)),
+        "train_step": bench_train_step(2 if quick else 3),
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)

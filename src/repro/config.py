@@ -92,6 +92,11 @@ class ModelConfig:
 
 @dataclass(frozen=True)
 class QuantConfig:
+    # off: no quantize, no controller state, qparams = params. simulate:
+    # grid values in a float container (paper-faithful). native_int8:
+    # int8 words + 2^-FL scale; with container_dtype="int8_packed" the
+    # words travel the mesh as 1-byte payloads AND feed the dense Pallas
+    # kernels directly (see use_pallas below).
     mode: str = "simulate"        # off | simulate | native_int8
     init_wl: int = 8
     init_fl: int = 4
@@ -104,7 +109,15 @@ class QuantConfig:
     gamma: float = 0.33           # lookback momentum
     eps_kl: float = 1e-2          # "KL == 0" tolerance (bits)
     strategy: str = "mean"        # initial push-up strategy: min | mean | max
+    # quantize_activations: per-slot dynamic-range activation quantize at
+    # the layer's WL (STE gradient). Purely elementwise — it never changes
+    # kernel dispatch (the flash/dense kernels see the quantized values).
     quantize_activations: bool = True
+    # stochastic_rounding=False forces RTN everywhere, which ALSO disables
+    # the in-kernel-PRNG quantize (controller._use_fused_prng: the fused
+    # kernel is an SR kernel) — RTN leaves take the deterministic XLA path.
+    # Dense-prologue leaves stay on the kernel path either way (mode 0 is
+    # in-kernel round-half-even, bit-identical to the XLA jnp.round path).
     stochastic_rounding: bool = True
     edf_sample: int = 65536       # PushDown EDF subsample size per tensor
     loss_hist_len: int = 128      # ring buffer for strategy adaptation
@@ -112,9 +125,15 @@ class QuantConfig:
     # ⟨WL,FL⟩ grid for all WL≤24 (paper-faithful / QPyTorch-equivalent);
     # bfloat16 halves every weight gather/all-reduce byte but is only exact
     # for WL≤8 (8-bit mantissa) — beyond-paper §Perf lever, deviation
-    # documented in EXPERIMENTS.md.
+    # documented in EXPERIMENTS.md. int8 = int8 words dequantized at the
+    # producer; int8_packed = lazy ⟨q8, sc, wref⟩ dicts dequantized at the
+    # USE site (weights cross the mesh as 1 byte/param) — and the ONLY
+    # container that feeds the dense Pallas kernel path (use_pallas below):
+    # float-container grids always reach the model as plain XLA tensors.
     container_dtype: str = "float32"
-    # sub-tensor exclusions (substring match on param path)
+    # sub-tensor exclusions (substring match on param path): these leaves
+    # are never quantized and always reach the model as plain arrays —
+    # independent of every dispatch flag below.
     exclude: Tuple[str, ...] = ("router", "norm", "a_log", "dt_bias", "scale")
     # --- Pallas dispatch flags -------------------------------------------
     # use_pallas routes the WHOLE train step through the fused TPU kernels
@@ -122,18 +141,27 @@ class QuantConfig:
     #   * quantize_params / quantize_params_packed → sr_quantize_fused[:_int8]
     #   * precision_switch's PushDown ladder        → edf_ladder_hists
     #   * the model forward's attention              → flash_attention
-    #     — including UNDER value_and_grad: the forward ops carry custom
-    #     VJPs whose backward passes are Pallas kernels (recompute-based
-    #     flash dQ/dK/dV; fxp_matmul/int8_matmul likewise ship VJPs with
-    #     transposed-index-map int8 weight streaming for dx, though the
-    #     model's dense layers don't call them yet — ROADMAP), pinned by
-    #     tests/test_vjp_differential.py.
+    #   * the model's DENSE LAYERS (container_dtype="int8_packed"):
+    #     models/common.dense feeds packed/prologue leaves straight to the
+    #     fxp kernels — forward streams int8 weight tiles into the MXU
+    #     (dequant in-register), dx streams the SAME tiles through a
+    #     transposed index map, dw = xᵀ@dy lands straight-through on the
+    #     master (kernels/ops.fxp_dense / fxp_qdense) — no dequantized
+    #     weight copy exists in HBM; tests/test_dense_path.py asserts the
+    #     jaxpr has fwd+dx+dw per dense layer and ZERO dequantized-weight
+    #     XLA matmuls.
+    #     — all of it UNDER value_and_grad: every forward op carries a
+    #     custom VJP whose backward passes are Pallas kernels, pinned by
+    #     tests/test_vjp_differential.py + tests/test_dense_path.py.
     # Any layer shape is eligible — primes included: the gridded kernels
     # tail-mask partial boundary blocks in-register (no divisibility
     # restriction, no whole-dim VMEM fallback; tests/test_tailmask.py).
     # Remaining exclusions: attention slots whose window arrives as a traced
-    # scalar (masked XLA path), the CNN family's conv forward, and
-    # unevenly-sharded / RTN-mode quantize leaves (controller._use_fused_prng).
+    # scalar (masked XLA path), the CNN family's conv forward, non-2-D
+    # quantized leaves that no dense layer consumes (embed tables, depthwise
+    # conv kernels, MoE expert einsum operands — dequantized at their use
+    # site as before; fixed_point.DENSE_PARAM_NAMES), and unevenly-sharded /
+    # RTN-mode quantize leaves (controller._use_fused_prng).
     use_pallas: bool = False
     # fused_prng draws the stochastic-rounding noise INSIDE the quantize
     # kernel (hardware PRNG on TPU, counter-hash under interpret), so the
@@ -146,6 +174,35 @@ class QuantConfig:
     # Noise streams are deterministic per step key but differ from the
     # jax.random stream the XLA path uses — same distribution, not same bits.
     fused_prng: bool = True
+    # dense_prologue (OPT-IN) fuses the QUANTIZE into the dense matmul
+    # PROLOGUE
+    # (kernels/fxp_matmul.fxp_qmatmul): dense-consumed leaves skip word
+    # materialization entirely — the "quantized copy" is the master plus
+    # ⟨seed, FL, mode⟩, and int8 tiles are drawn in VMEM en route to the
+    # MXU, killing the q8 HBM write+read-back round trip (ROADMAP's fused
+    # quantize-into-matmul item). Only consulted when use_pallas is set
+    # and container_dtype="int8_packed"; non-dense quantized leaves keep
+    # the materialized container either way. SR always uses the PORTABLE
+    # index-hash stream — a pure function of ⟨seed, element index⟩, so
+    # the fwd and dx recompute agree on every word even though they tile
+    # the weight differently. On CPU/interpret that makes prologue words
+    # bit-identical to sr_quantize_fused_int8 on 2-D leaves; on compiled
+    # TPU the MATERIALIZED kernel draws from the hardware PRNG instead,
+    # so the two dispatches are same-distribution, not same-bits (same
+    # caveat as fused_prng above). RTN (serving / SR off) is
+    # round-half-even, bit-identical to the XLA packed path everywhere. Explicitly-
+    # sharded dense leaves are EXCLUDED (they keep the materialized packed
+    # container): pallas_call has no SPMD partitioning rule, and a
+    # prologue dict on a mesh would gather the f32 master into every
+    # launch (controller._use_dense_prologue; ROADMAP open item). Off by
+    # default: the prologue re-reads the f32 MASTER once per M-block where
+    # the materialized path re-reads 1-byte words, so plain HBM-bytes
+    # arithmetic favors materialized words whenever the M grid has more
+    # than ~2 blocks (large-batch training); enable it for
+    # quantize-round-trip-bound regimes (the bench train_step rows
+    # measure both). Serving always materializes regardless
+    # (serve/engine.quantize_for_serving).
+    dense_prologue: bool = False
 
 
 # ---------------------------------------------------------------------------

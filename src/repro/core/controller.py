@@ -39,6 +39,7 @@ from repro.config import QuantConfig
 from repro.core import fixed_point as fxp
 from repro.core import pushdown, pushup
 from repro.kernels import ops as kops
+from repro.kernels.sr_quantize import fold_shard_seed
 
 Array = jax.Array
 PyTree = Any
@@ -270,6 +271,40 @@ def _use_fused_prng(qcfg: QuantConfig, key, wl: Array, leaf: Array,
     return shd.shard_grid(leaf.shape, sharding.spec, sharding.mesh) is not None
 
 
+def _use_dense_prologue(qcfg: QuantConfig, path: str, fl: Array,
+                        leaf: Array, sharding=None) -> bool:
+    """True when ``leaf`` should skip word materialization entirely and be
+    quantized in the MATMUL PROLOGUE (``kernels/ops.fxp_qdense``): packed
+    mode only, behind ``use_pallas`` + ``dense_prologue``, and only for
+    leaves ``models/common.dense`` actually feeds to the kernels — a 2-D
+    weight (scalar ⟨WL,FL⟩) or a per-layer-stacked (L, K, N) weight with
+    an (L,)-vector precision, named in ``fixed_point.DENSE_PARAM_NAMES``.
+    Everything else (embed tables, conv kernels, MoE expert einsum
+    operands) keeps the materialized packed container. Works for SR (per-
+    leaf/-layer seeds, portable index-hash stream) AND RTN (key=None /
+    stochastic_rounding off → mode 0, bit-identical to ``jnp.round``),
+    so serving takes the same path.
+
+    EXPLICITLY-SHARDED leaves are excluded: pallas_call has no SPMD
+    partitioning rule, so a prologue dict on a mesh would make GSPMD
+    gather the f32 MASTER into every dense kernel launch — 4× the wire
+    bytes of the 1-byte packed container those leaves keep instead
+    (whose q8 payload is what the mesh moves either way). A shard_map
+    wrapper for the dense matmul kernels is the open ROADMAP item."""
+    if not (qcfg.use_pallas and qcfg.dense_prologue):
+        return False
+    if not fxp.is_dense_param(path):
+        return False
+    if sharding is not None:
+        if not isinstance(sharding, NamedSharding):
+            return False
+        if any(shd.spec_dim_axes(sharding.spec, leaf.ndim)):
+            return False
+    if fl.ndim == 0:
+        return leaf.ndim == 2
+    return fl.ndim == 1 and leaf.ndim == 3 and fl.shape[0] == leaf.shape[0]
+
+
 def quantize_params(params: PyTree, state: Dict[str, Any], qcfg: QuantConfig,
                     key: Array | None = None, dtype=jnp.float32,
                     shardings: PyTree | None = None) -> PyTree:
@@ -359,13 +394,37 @@ def quantize_params_packed(params: PyTree, state: Dict[str, Any],
     (see fixed_point.PACKED_KEYS); consumers call fxp.unpack_tree AT the use
     site — inside the scanned layer body, after the per-layer gather — so
     weights cross the mesh as int8 (4× less than the f32 container).
-    Differentiate w.r.t. this tree: cotangents land on each "wref"."""
+    Differentiate w.r.t. this tree: cotangents land on each "wref".
+
+    Dense-consumed leaves (``fixed_point.is_dense_param``) under
+    ``use_pallas`` + ``dense_prologue`` skip the word materialization
+    entirely: they come back as quantize-PROLOGUE dicts ⟨wm, seed, flq,
+    mode⟩ — the master itself plus the draw metadata — and the matmul
+    kernel quantizes tiles in-register (``kernels/ops.fxp_qdense``), so no
+    quantized weight tensor exists in HBM at all. Cotangents for those
+    land on "wm" (straight-through dw); ``strip_packed_grads`` extracts
+    both flavors."""
     tensors = state["tensors"]
     flat_sh = None
     if shardings is not None:
         flat_sh = dict(
             (path_str(p), s) for p, s in
             jax.tree_util.tree_flatten_with_path(shardings)[0])
+    sr = bool(qcfg.stochastic_rounding and key is not None)
+
+    def _sc_for(p, leaf, fl):
+        """Dequant scale 2^-FL, shaped so the scan can slice it: per-layer
+        (L,)-FL leaves get (L, 1, ...); a per-TENSOR ⟨WL,FL⟩ on a scanned
+        leaf (e.g. an (L, nh) d_skip, too flat for per-layer treatment)
+        still needs the leading scan dim — a bare scalar would crash
+        lax.scan's leading-axis slicing."""
+        sc = fxp.pow2i(-fl).astype(jnp.bfloat16)
+        if fl.shape:
+            return sc.reshape(fl.shape + (1,) * (leaf.ndim - 1))
+        if is_stacked(p) and leaf.ndim >= 2:
+            return jnp.broadcast_to(sc.reshape((1,) * leaf.ndim),
+                                    (leaf.shape[0],) + (1,) * (leaf.ndim - 1))
+        return sc
 
     def visit(path, leaf):
         p = path_str(path)
@@ -374,6 +433,33 @@ def quantize_params_packed(params: PyTree, state: Dict[str, Any],
         ts = tensors[p]
         fl = ts["fl"]
         sh = flat_sh.get(p) if flat_sh is not None else None
+        if (qcfg.use_pallas and fxp.is_dense_param(p) and sh is not None
+                and len(sh.device_set) > 1 and not sh.is_fully_replicated):
+            # The dense Pallas kernels have no SPMD partitioning rule: a
+            # >1-device-sharded dense leaf fed to them would be silently
+            # REPLICATED by GSPMD (all-gathering every operand into every
+            # launch). Refuse loudly instead of regressing quietly — the
+            # shard_map wrapper for the dense matmuls is the open ROADMAP
+            # item; until then mesh runs keep use_pallas off.
+            raise ValueError(
+                f"quantize_params_packed: dense leaf '{p}' is sharded over "
+                "a multi-device mesh while quant.use_pallas is on — the "
+                "dense kernel path (models/common.dense → fxp kernels) "
+                "cannot be partitioned by GSPMD and would replicate every "
+                "launch. Disable quant.use_pallas for mesh runs (ROADMAP: "
+                "shard_map wrapper for the dense matmul kernels).")
+        if _use_dense_prologue(qcfg, p, fl, leaf, sh):
+            if fl.shape:          # stacked: per-layer folded seeds so layer
+                ls = jnp.arange(fl.shape[0], dtype=jnp.int32)  # l owns its
+                seed = fold_shard_seed(                        # own stream
+                    _leaf_seed(key, p) if sr else jnp.int32(0), ls)
+            else:
+                seed = _leaf_seed(key, p) if sr else jnp.int32(0)
+            wm = leaf.astype(jnp.float32)
+            if sh is not None:
+                wm = jax.lax.with_sharding_constraint(wm, sh)
+            return {"wm": wm, "seed": seed, "flq": fl,
+                    "mode": jnp.full(fl.shape, 1 if sr else 0, jnp.int32)}
         if _use_fused_prng(qcfg, key, fl, leaf, sh):
             # in-kernel PRNG: the int8 words are produced in one pass with
             # no noise operand — the packed wire payload never sees f32.
@@ -381,9 +467,7 @@ def quantize_params_packed(params: PyTree, state: Dict[str, Any],
             # laid out on the mesh; only wref needs the constraint.
             q8 = kops.sr_quantize_fused_int8(leaf, _leaf_seed(key, p), fl,
                                              use_pallas=True, sharding=sh)
-            sc = fxp.pow2i(-fl).astype(jnp.bfloat16)
-            if fl.shape:
-                sc = sc.reshape(fl.shape + (1,) * (leaf.ndim - 1))
+            sc = _sc_for(p, leaf, fl)
             wref = jnp.zeros(leaf.shape, jnp.bfloat16)
             if sh is not None:
                 wref = jax.lax.with_sharding_constraint(wref, sh)
@@ -399,7 +483,7 @@ def quantize_params_packed(params: PyTree, state: Dict[str, Any],
         x = leaf.astype(jnp.float32) * scale
         q = fxp.stochastic_round(x, u) if u is not None else jnp.round(x)
         q8 = jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
-        sc = fxp.pow2i(-fl).astype(jnp.bfloat16)
+        sc = _sc_for(p, leaf, ts["fl"])
         wref = jnp.zeros(leaf.shape, jnp.bfloat16)
         if flat_sh is not None and p in flat_sh:
             q8 = jax.lax.with_sharding_constraint(q8, flat_sh[p])
@@ -410,14 +494,17 @@ def quantize_params_packed(params: PyTree, state: Dict[str, Any],
 
 
 def strip_packed_grads(grads: PyTree) -> PyTree:
-    """Grad tree of a packed qparams tree → plain per-param grads (each
-    packed dict's cotangent lives in its "wref"; q8 carries float0)."""
+    """Grad tree of a packed qparams tree → plain per-param grads. A
+    packed dict's cotangent lives in its "wref" (q8 carries float0); a
+    quantize-prologue dict's lives in its "wm" — the straight-through
+    dw = xᵀ@dy the dense kernels deposit directly on the master."""
+    def is_q(g):
+        return isinstance(g, dict) and frozenset(g) in (fxp.PACKED_KEYS,
+                                                        fxp.QDENSE_KEYS)
+
     return jax.tree_util.tree_map(
-        lambda g: g["wref"] if isinstance(g, dict)
-        and frozenset(g) == fxp.PACKED_KEYS else g,
-        grads,
-        is_leaf=lambda g: isinstance(g, dict)
-        and frozenset(g) == fxp.PACKED_KEYS)
+        lambda g: (g["wref"] if "wref" in g else g["wm"]) if is_q(g) else g,
+        grads, is_leaf=is_q)
 
 
 def snapshot(state: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:

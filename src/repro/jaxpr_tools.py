@@ -91,6 +91,36 @@ def pallas_block_shapes(jaxpr):
             for eqn in pallas_eqns(jaxpr)]
 
 
+def iter_xla_eqns(jaxpr):
+    """Like ``iter_eqns`` but does NOT descend into pallas_call bodies —
+    the view of what XLA itself executes (a kernel's in-register
+    dot_general on a whole-dim block is not an XLA matmul)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            for sub in subjaxprs(v):
+                yield from iter_xla_eqns(sub)
+
+
+def dot_general_shapes(jaxpr):
+    """(lhs shape, rhs shape, rhs dtype) per XLA dot_general eqn
+    (descending into scan/cond/pjit/custom-vjp bodies but not into Pallas
+    kernels). Backs the dense-path contract: with the fxp kernels wired
+    into models/common.dense, NO dot_general in the differentiated train
+    step may consume a float operand of a dense weight's shape — a
+    dequantized HBM weight copy shows up here as a (K, N)-shaped f32/bf16
+    rhs (tests/test_dense_path.py)."""
+    out = []
+    for eqn in iter_xla_eqns(jaxpr):
+        if eqn.primitive.name != "dot_general":
+            continue
+        lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+        out.append((tuple(lhs.shape), tuple(rhs.shape), rhs.dtype))
+    return out
+
+
 # Gather-shaped collectives whose param-sized outputs would mean the f32
 # master (or its quantized copy) is being reassembled across the mesh —
 # exactly what the shard_map-wrapped quantize exists to prevent. psum/

@@ -202,6 +202,46 @@ def int8_matmul(xq: Array, wq: Array, sx: Array, sw: Array, *,
     return ref.ref_int8_matmul(xq, wq, sx, sw)
 
 
+def fxp_dense(x: Array, wq: Array, scale: Array, wref: Array, *,
+              use_pallas: bool = False, out_dtype=None) -> Array:
+    """The model's dense layer over MATERIALIZED int8 words (the packed
+    ⟨q8, sc, wref⟩ container): differentiable with the straight-through
+    weight cotangent — dx streams the same int8 tiles (transposed index
+    map), dw = xᵀ@dy lands whole on ``wref`` (→ the master param via
+    ``controller.strip_packed_grads``), and the scale gets a ZERO cotangent
+    (it is controller state, exactly ``fixed_point.dequant_packed``'s
+    rule) — so flipping dispatch never changes the optimizer step. The
+    non-Pallas path is the XLA dequant-then-dot this replaces."""
+    if use_pallas:
+        return _fm.fxp_dense_vjp(x, wq, scale, wref, out_dtype=out_dtype,
+                                 interpret=not _on_tpu())
+    wv = wq.astype(jnp.float32) * jax.lax.stop_gradient(
+        scale.astype(jnp.float32).reshape(())) + wref.astype(jnp.float32)
+    out = jnp.dot(x.astype(jnp.float32), wv,
+                  preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or x.dtype)
+
+
+def fxp_qdense(x: Array, w: Array, seed: Array, fl: Array, mode: Array, *,
+               use_pallas: bool = False, out_dtype=None) -> Array:
+    """Quantize-PROLOGUE dense layer: consumes the float MASTER weight +
+    ⟨FL, seed, mode⟩ and quantizes tiles in-register en route to the MXU —
+    the int8 words only ever exist in VMEM (no q8 HBM round trip on
+    freshly re-quantized layers). mode: 1 = SR (portable index-hash
+    stream, bit-identical to ``sr_quantize_fused_int8`` for a 2-D leaf),
+    0 = RTN (round-half-even, bit-identical to the XLA packed path).
+    Straight-through: dw = xᵀ@dy lands directly on ``w`` (the master)."""
+    seed = jnp.asarray(seed, jnp.int32)
+    fl = jnp.asarray(fl, jnp.int32)
+    mode = jnp.asarray(mode, jnp.int32)
+    if use_pallas:
+        return _fm.fxp_qdense_vjp(x, w, seed, fl, mode,
+                                  out_dtype=out_dtype,
+                                  interpret=not _on_tpu())
+    return ref.ref_fxp_qdense(x, w, seed, fl, mode).astype(out_dtype
+                                                           or x.dtype)
+
+
 def kl_hist(w: Array, q: Array, num_bins: int = 256, *,
             use_pallas: bool = False) -> Array:
     if use_pallas:

@@ -110,6 +110,37 @@ def ref_sr_quantize_fused_int8_words(x: Array, seed, fl) -> Array:
     return jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
 
 
+def ref_qdense_words(w: Array, seed, fl, mode=1) -> Array:
+    """Bit-exact oracle of the quantize-prologue word draw
+    (``fxp_matmul._quantize_w_tile``): element (k, n) of a (K, N) master
+    hashes its flat index k·N + n, which for a 2-D leaf is EXACTLY the
+    ``sr_quantize_fused_int8`` PORTABLE stream — prologue and materialized
+    words agree bit-for-bit wherever both use it (interpret mode / CPU
+    CI; on compiled TPU the materialized kernel draws from the hardware
+    PRNG instead, so there the dispatches agree in distribution only).
+    ``mode`` 1 = SR, 0 = RTN (round-half-even, matching ``jnp.round``
+    on every backend)."""
+    xf = w.astype(jnp.float32) * _pow2(fl)
+    u = ref_fused_noise(seed, w.size).reshape(w.shape)
+    f = jnp.floor(xf)
+    q_sr = f + (u < (xf - f)).astype(jnp.float32)
+    q = jnp.where(jnp.asarray(mode) == 1, q_sr, jnp.round(xf))
+    return jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
+
+
+def ref_fxp_qdense(x: Array, w: Array, seed, fl, mode=1) -> Array:
+    """Forward oracle of ``fxp_qmatmul``: x @ (words · 2^-fl) with the
+    straight-through view (differentiating this gives dx through the
+    dequantized words and dw = xᵀ@dy onto the master — the same cotangents
+    the Pallas VJP produces)."""
+    words = jax.lax.stop_gradient(
+        ref_qdense_words(w, seed, fl, mode).astype(jnp.float32))
+    wv = w + jax.lax.stop_gradient(words * _pow2(-fl) - w)
+    acc = jnp.dot(x.astype(jnp.float32), wv.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return acc.astype(x.dtype)
+
+
 def _stacked_offsets(x: Array):
     n = x[0].size
     rows = -(-n // FUSED_LANES)

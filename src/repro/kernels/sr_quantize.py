@@ -110,22 +110,34 @@ def sr_quantize(x: Array, u: Array, wl: Array, fl: Array, *,
 # Fused-PRNG variants: noise is drawn inside the kernel, never touching HBM.
 
 
-def _hash_uniform(seed: Array, shape, row0: Array, cols: int) -> Array:
-    """Portable in-kernel U[0,1): murmur3-finalizer of the global element
-    index mixed with the seed (golden-ratio stride). Runs anywhere — it is
-    the noise source whenever the hardware PRNG primitives are unavailable
-    (interpret mode / CPU CI). Index arithmetic wraps mod 2^32, so streams
-    repeat only beyond 4G-element tensors."""
-    r = jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
-    c = jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
-    h = (row0.astype(jnp.uint32) + r) * jnp.uint32(cols) + c
-    h = h + seed.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+def uniform_from_index(seed: Array, idx: Array) -> Array:
+    """Portable U[0,1) from a uint32 element index: murmur3-finalizer of
+    the index mixed with the seed (golden-ratio stride). THE bit-pinned
+    portable stream (``ref.ref_fused_noise`` regenerates it; the golden
+    file trips on drift) — every kernel that draws noise for element
+    ``idx`` of a tensor must come through here so streams agree across
+    kernels that tile the same tensor differently (e.g. the quantize
+    prologue of ``fxp_matmul.fxp_qmatmul`` vs its dx recompute)."""
+    h = idx.astype(jnp.uint32) + seed.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
     h ^= h >> 16
     h = h * jnp.uint32(0x7FEB352D)
     h ^= h >> 15
     h = h * jnp.uint32(0x846CA68B)
     h ^= h >> 16
     return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def _hash_uniform(seed: Array, shape, row0: Array, cols: int) -> Array:
+    """Portable in-kernel U[0,1) over a (rows, cols) padded layout: the
+    global element index (row0 + r)·cols + c fed to
+    :func:`uniform_from_index`. Runs anywhere — it is the noise source
+    whenever the hardware PRNG primitives are unavailable (interpret mode /
+    CPU CI). Index arithmetic wraps mod 2^32, so streams repeat only
+    beyond 4G-element tensors."""
+    r = jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+    c = jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+    idx = (row0.astype(jnp.uint32) + r) * jnp.uint32(cols) + c
+    return uniform_from_index(seed, idx)
 
 
 def _hw_uniform(seed: Array, shape, block_ids) -> Array:

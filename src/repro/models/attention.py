@@ -51,12 +51,12 @@ def init_layer(key: Array, cfg: ModelConfig, num_layers: int,
 
 
 def _project_qkv(p, x, cfg: ModelConfig, positions: Optional[Array],
-                 rope_on: bool = True):
+                 rope_on: bool = True, use_pallas: bool = False):
     B, S, _ = x.shape
     h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-    q = common.dense(x, p["wq"]).reshape(B, S, h, dh)
-    k = common.dense(x, p["wk"]).reshape(B, S, hkv, dh)
-    v = common.dense(x, p["wv"]).reshape(B, S, hkv, dh)
+    q = common.dense(x, p["wq"], use_pallas=use_pallas).reshape(B, S, h, dh)
+    k = common.dense(x, p["wk"], use_pallas=use_pallas).reshape(B, S, hkv, dh)
+    v = common.dense(x, p["wv"], use_pallas=use_pallas).reshape(B, S, hkv, dh)
     if cfg.use_qk_norm:
         q = common.rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = common.rms_norm(k, p["k_norm"], cfg.norm_eps)
@@ -79,7 +79,7 @@ def attend_full(p: Dict[str, Array], x: Array, cfg: ModelConfig,
     kernel needs a static window so the dynamic form uses the masked path.
     """
     h = common.rms_norm(x, p["pre_norm"], cfg.norm_eps)
-    q, k, v = _project_qkv(p, h, cfg, positions)
+    q, k, v = _project_qkv(p, h, cfg, positions, use_pallas=use_pallas)
     static_window = isinstance(window, int)
     if use_pallas and static_window:
         out = ops.attention(q, k, v, causal=causal, window=window,
@@ -88,7 +88,7 @@ def attend_full(p: Dict[str, Array], x: Array, cfg: ModelConfig,
         out = _masked_attention(q, k, v, positions, positions, window,
                                 cfg.attn_logit_softcap, causal)
     B, S = x.shape[:2]
-    out = common.dense(out.reshape(B, S, -1), p["wo"])
+    out = common.dense(out.reshape(B, S, -1), p["wo"], use_pallas=use_pallas)
     out = sharding.shard(out, "batch", "seq", None)
     if cfg.use_post_norm:
         out = common.rms_norm(out, p["post_norm"], cfg.norm_eps)
@@ -151,14 +151,14 @@ def _masked_attention(q, k, v, qpos, kpos, window, cap, causal):
 
 def attend_decode(p: Dict[str, Array], x: Array, cfg: ModelConfig,
                   cache_k: Array, cache_v: Array, slot_pos: Array, t: Array,
-                  *, window: Array | int = 0
+                  *, window: Array | int = 0, use_pallas: bool = False
                   ) -> Tuple[Array, Tuple[Array, Array]]:
     """One-token decode. x: (B, 1, D); cache: (B, C, Hkv, Dh); slot_pos: (C,)
     absolute positions per cache slot (-1 = empty); t: current position."""
     h = common.rms_norm(x, p["pre_norm"], cfg.norm_eps)
     B = x.shape[0]
     pos = jnp.broadcast_to(t[None, None], (B, 1))
-    q, k, v = _project_qkv(p, h, cfg, pos)
+    q, k, v = _project_qkv(p, h, cfg, pos, use_pallas=use_pallas)
     C = cache_k.shape[1]
     slot = (t % C).astype(jnp.int32)
     cache_k = jax.lax.dynamic_update_slice_in_dim(
@@ -168,37 +168,40 @@ def attend_decode(p: Dict[str, Array], x: Array, cfg: ModelConfig,
     kpos = jnp.broadcast_to(slot_pos[None, :], (B, C))
     out = _masked_attention(q, cache_k, cache_v, pos, kpos, window,
                             cfg.attn_logit_softcap, causal=True)
-    out = common.dense(out.reshape(B, 1, -1), p["wo"])
+    out = common.dense(out.reshape(B, 1, -1), p["wo"], use_pallas=use_pallas)
     if cfg.use_post_norm:
         out = common.rms_norm(out, p["post_norm"], cfg.norm_eps)
     return x + out, (cache_k, cache_v)
 
 
 def cross_attend(p: Dict[str, Array], x: Array, cfg: ModelConfig,
-                 memory_k: Array, memory_v: Array) -> Array:
+                 memory_k: Array, memory_v: Array,
+                 use_pallas: bool = False) -> Array:
     """Cross-attention over a precomputed encoder memory (VLM layers).
     memory_k/v: (B, M, Hkv, Dh) — projected once at prefill."""
     h = common.rms_norm(x, p["pre_norm"], cfg.norm_eps)
     B, S, _ = x.shape
     hq, dh = cfg.num_heads, cfg.resolved_head_dim
-    q = common.dense(h, p["wq"]).reshape(B, S, hq, dh)
+    q = common.dense(h, p["wq"], use_pallas=use_pallas).reshape(B, S, hq, dh)
     q = sharding.shard(q, "batch", "seq", "heads", None)
     M = memory_k.shape[1]
     kpos = jnp.broadcast_to(jnp.arange(M)[None], (B, M))
     qpos = jnp.broadcast_to(jnp.full((1,), M, jnp.int32), (B, S))
     out = _masked_attention(q, memory_k, memory_v, qpos, kpos, 0,
                             cfg.attn_logit_softcap, causal=False)
-    out = common.dense(out.reshape(B, S, -1), p["wo"])
+    out = common.dense(out.reshape(B, S, -1), p["wo"], use_pallas=use_pallas)
     if cfg.use_post_norm:
         out = common.rms_norm(out, p["post_norm"], cfg.norm_eps)
     return x + out
 
 
-def project_memory(p: Dict[str, Array], memory: Array, cfg: ModelConfig
-                   ) -> Tuple[Array, Array]:
+def project_memory(p: Dict[str, Array], memory: Array, cfg: ModelConfig,
+                   use_pallas: bool = False) -> Tuple[Array, Array]:
     """Project encoder memory to (k, v) once (used by cross layers)."""
     B, M, _ = memory.shape
     hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
-    k = common.dense(memory, p["wk"]).reshape(B, M, hkv, dh)
-    v = common.dense(memory, p["wv"]).reshape(B, M, hkv, dh)
+    k = common.dense(memory, p["wk"], use_pallas=use_pallas
+                     ).reshape(B, M, hkv, dh)
+    v = common.dense(memory, p["wv"], use_pallas=use_pallas
+                     ).reshape(B, M, hkv, dh)
     return k, v

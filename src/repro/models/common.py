@@ -30,20 +30,76 @@ def act_fn(x: Array, kind: str) -> Array:
     return jax.nn.silu(x)
 
 
-def dense(x: Array, w: Array, *, out_logical: str | None = None) -> Array:
+def dense(x: Array, w, *, out_logical: str | None = None,
+          use_pallas: bool = False) -> Array:
     """x @ w with f32 accumulation; annotates the contraction output.
 
-    With the '#tp_reduce_bf16' rules flag, the dot's output dtype is bf16:
-    the MXU still accumulates in f32 internally, but row-parallel partial
-    sums cross the ICI in bf16 — half the TP all-reduce bytes for a ~2^-8
-    relative rounding on a 16-way sum (§Perf lever)."""
-    pref = (jnp.bfloat16 if sharding.flag("#tp_reduce_bf16")
-            and x.dtype == jnp.bfloat16 else jnp.float32)
-    y = jnp.dot(x, w.astype(x.dtype), preferred_element_type=pref)
-    y = y.astype(x.dtype)
+    ``w`` is either a plain weight array or a QUANTIZED-LEAF dict the
+    controller emitted (container_dtype="int8_packed"):
+
+    * packed ⟨q8, sc, wref⟩ — materialized int8 words. Under
+      ``use_pallas`` they stream straight into the fxp Pallas kernels
+      (``kernels/ops.fxp_dense``: fwd + dx on int8 tiles, dequant
+      in-register, straight-through dw onto wref) — the weights are never
+      dequantized into HBM. Without it, the XLA dequant-then-dot path.
+    * prologue ⟨wm, seed, flq, mode⟩ — no words at all: the kernel
+      quantizes master tiles in VMEM en route to the MXU
+      (``kernels/ops.fxp_qdense``). Pallas-only by construction (the
+      controller emits it only under use_pallas + dense_prologue).
+
+    With the '#tp_reduce_bf16' rules flag, the plain dot's output dtype is
+    bf16: the MXU still accumulates in f32 internally, but row-parallel
+    partial sums cross the ICI in bf16 — half the TP all-reduce bytes for
+    a ~2^-8 relative rounding on a 16-way sum (§Perf lever). The flag
+    applies to the PLAIN-array path only: the kernel paths accumulate in
+    f32 VMEM scratch and emit x.dtype. NOTE the kernel paths are
+    single-device/replicated constructs — pallas_call has no SPMD
+    partitioning rule. The controller keeps explicitly-sharded leaves off
+    the PROLOGUE format (controller._use_dense_prologue), but a sharded
+    MATERIALIZED packed leaf handed here under use_pallas would still be
+    replicated by GSPMD; shard_map-wrapping the dense kernels is the open
+    ROADMAP item, and no shipped config enables use_pallas on a mesh."""
+    if isinstance(w, dict):
+        y = _dense_quantized(x, w, use_pallas)
+    else:
+        pref = (jnp.bfloat16 if sharding.flag("#tp_reduce_bf16")
+                and x.dtype == jnp.bfloat16 else jnp.float32)
+        y = jnp.dot(x, w.astype(x.dtype), preferred_element_type=pref)
+        y = y.astype(x.dtype)
     if out_logical and x.ndim == 3:
         y = sharding.shard(y, "batch", "seq", out_logical)
     return y
+
+
+def _dense_quantized(x: Array, w: dict, use_pallas: bool) -> Array:
+    """Dense over a quantized-leaf dict; x may be (..., K) — the kernels
+    take 2-D, so leading dims are flattened into M."""
+    from repro.kernels import ops  # local: models stay importable sans ops
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if fxp.is_qdense(w):
+        # scan-sliced per-layer metadata arrives as size-1 arrays
+        seed, flq, mode = (jnp.reshape(w[k], ()) for k in
+                          ("seed", "flq", "mode"))
+        y2 = ops.fxp_qdense(x2, w["wm"], seed, flq, mode,
+                            use_pallas=use_pallas, out_dtype=x.dtype)
+    elif fxp.is_packed(w):
+        if use_pallas:
+            y2 = ops.fxp_dense(x2, w["q8"], jnp.reshape(w["sc"], ()),
+                               w["wref"], use_pallas=True, out_dtype=x.dtype)
+        else:
+            # Defensive only: the model's own call sites unpack packed
+            # dicts upstream when use_pallas is off, so this branch serves
+            # direct callers handing dense() a packed leaf — it is the
+            # EXACT legacy path (unpack_tree's dequant + the plain dot),
+            # not a reimplementation of ops.fxp_dense's f32 fallback.
+            wd = fxp.dequant_packed(w["q8"], w["sc"], w["wref"])
+            y2 = jnp.dot(x2, wd.astype(x.dtype),
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    else:
+        raise TypeError(f"dense: unrecognized weight dict keys {set(w)}")
+    return y2.reshape(lead + (y2.shape[-1],))
 
 
 def rope(x: Array, positions: Array, theta: float) -> Array:

@@ -28,11 +28,13 @@ def init_layer(key: Array, cfg: ModelConfig, num_layers: int,
 
 
 def apply(p: Dict[str, Array], x: Array, cfg: ModelConfig,
-          residual: bool = True) -> Array:
+          residual: bool = True, use_pallas: bool = False) -> Array:
     h = common.rms_norm(x, p["pre_norm"], cfg.norm_eps)
-    gate = common.dense(h, p["wi_gate"], out_logical="ff")
-    up = common.dense(h, p["wi_up"], out_logical="ff")
-    out = common.dense(common.act_fn(gate, cfg.act_fn) * up, p["wo"])
+    gate = common.dense(h, p["wi_gate"], out_logical="ff",
+                        use_pallas=use_pallas)
+    up = common.dense(h, p["wi_up"], out_logical="ff", use_pallas=use_pallas)
+    out = common.dense(common.act_fn(gate, cfg.act_fn) * up, p["wo"],
+                       use_pallas=use_pallas)
     out = sharding.shard(out, "batch", "seq", None)
     if "post_norm" in p:
         out = common.rms_norm(out, p["post_norm"], cfg.norm_eps)

@@ -59,7 +59,7 @@ def init_layer(key: Array, cfg: ModelConfig, num_layers: int) -> Dict[str, Array
 
 
 def apply(p: Dict[str, Array], x: Array, cfg: ModelConfig,
-          dropless: bool = False) -> Array:
+          dropless: bool = False, use_pallas: bool = False) -> Array:
     """x: (B, S, D) -> (B, S, D) with residual.
 
     GShard-style **group-limited** capacity dispatch: tokens are split into
@@ -123,7 +123,8 @@ def apply(p: Dict[str, Array], x: Array, cfg: ModelConfig,
 
     if "dense" in p:  # arctic: parallel dense residual FFN
         from repro.models import mlp
-        out = out + mlp.apply(p["dense"], h, cfg, residual=False)
+        out = out + mlp.apply(p["dense"], h, cfg, residual=False,
+                              use_pallas=use_pallas)
     return x + out
 
 

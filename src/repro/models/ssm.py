@@ -129,14 +129,14 @@ def ssd_chunked(x: Array, dt: Array, a_log: Array, B: Array, C: Array,
 
 
 def apply(p: Dict[str, Array], x: Array, cfg: ModelConfig,
-          return_state: bool = False):
+          return_state: bool = False, use_pallas: bool = False):
     """Full-sequence mamba2 block with residual. x: (B, S, D).
 
     ``return_state=True`` additionally returns the decode cache as of the
     last position (prefill → decode handoff)."""
     di, nh, hd, n = dims(cfg)
     h = common.rms_norm(x, p["pre_norm"], cfg.norm_eps)
-    proj = common.dense(h, p["in_proj"])
+    proj = common.dense(h, p["in_proj"], use_pallas=use_pallas)
     z, xbc_raw, dtraw = _split_proj(proj, cfg)
     xbc = causal_depthwise_conv(xbc_raw, p["conv_w"])
     xbc = jax.nn.silu(xbc)
@@ -152,7 +152,7 @@ def apply(p: Dict[str, Array], x: Array, cfg: ModelConfig,
     y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
                         p["gate_norm"], cfg.norm_eps)
     y = sharding.shard(y, "batch", "seq", "ff")
-    out = common.dense(y, p["out_proj"])
+    out = common.dense(y, p["out_proj"], use_pallas=use_pallas)
     out = sharding.shard(out, "batch", "seq", None)
     if return_state:
         kw = p["conv_w"].shape[-2]
@@ -173,11 +173,12 @@ def init_cache(cfg: ModelConfig, batch: int, num_layers: int, dtype=jnp.float32)
 
 
 def apply_decode(p: Dict[str, Array], x: Array, cfg: ModelConfig,
-                 cache: Dict[str, Array]) -> Tuple[Array, Dict[str, Array]]:
+                 cache: Dict[str, Array], use_pallas: bool = False
+                 ) -> Tuple[Array, Dict[str, Array]]:
     """One-token recurrent step. x: (B, 1, D)."""
     di, nh, hd, n = dims(cfg)
     h = common.rms_norm(x, p["pre_norm"], cfg.norm_eps)
-    proj = common.dense(h, p["in_proj"])
+    proj = common.dense(h, p["in_proj"], use_pallas=use_pallas)
     z, xbc, dtraw = _split_proj(proj, cfg)
 
     conv_in = jnp.concatenate([cache["conv"], xbc], axis=1)   # (B, K, C)
@@ -201,5 +202,5 @@ def apply_decode(p: Dict[str, Array], x: Array, cfg: ModelConfig,
     y = y.reshape(-1, 1, di).astype(x.dtype)
     y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
                         p["gate_norm"], cfg.norm_eps)
-    out = common.dense(y, p["out_proj"])
+    out = common.dense(y, p["out_proj"], use_pallas=use_pallas)
     return x + out, {"conv": new_conv, "ssm": ssm}

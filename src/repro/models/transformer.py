@@ -38,9 +38,13 @@ from repro.models import attention, common, mlp, moe, ssm
 
 Array = jax.Array
 
-# packed-int8 leaves (fxp.PACKED_KEYS dicts) are dequantized at the use
-# site: INSIDE the scan body for per-layer weights (so the FSDP gather
-# moves int8, not bf16/f32) and at entry for embed/head.
+# Quantized leaves (fxp.PACKED_KEYS / QDENSE_KEYS dicts) are dequantized at
+# the use site: INSIDE the scan body for per-layer weights (so the FSDP
+# gather moves int8, not bf16/f32) and at entry for embed/head. Under
+# use_pallas, DENSE-consumed leaves (fixed_point.DENSE_PARAM_NAMES) are NOT
+# dequantized at all — they ride through intact and common.dense feeds them
+# straight to the fxp Pallas kernels (int8 tiles into the MXU, dequant
+# in-register; quantize-prologue leaves never materialize words anywhere).
 _unpack = fxp.unpack_tree
 
 
@@ -163,14 +167,17 @@ def _slot_params(blocks, plan, i, slot, shared):
     return blocks[slot_key(i, slot)]
 
 
-def _apply_ffn(pffn, x, cfg, slot: Slot, shared, dropless: bool = False):
+def _apply_ffn(pffn, x, cfg, slot: Slot, shared, dropless: bool = False,
+               use_pallas: bool = False):
     if slot.ffn == "none":
         return x
     if slot.shared:
-        return mlp.apply(shared["mlp"], x, cfg) if "mlp" in (shared or {}) else x
+        return (mlp.apply(shared["mlp"], x, cfg, use_pallas=use_pallas)
+                if "mlp" in (shared or {}) else x)
     if slot.ffn == "moe":
-        return moe.apply(pffn, x, cfg, dropless=dropless)
-    return mlp.apply(pffn, x, cfg)
+        return moe.apply(pffn, x, cfg, dropless=dropless,
+                         use_pallas=use_pallas)
+    return mlp.apply(pffn, x, cfg, use_pallas=use_pallas)
 
 
 def _maybe_qact(x, act_wl, name, enabled):
@@ -194,7 +201,7 @@ def forward(params: Dict[str, Any], cfg: ModelConfig, *,
     """
     plan, np_ = build_plan(cfg)
     params = {**params, **_unpack({k: v for k, v in params.items()
-                                   if k != "blocks"})}
+                                   if k != "blocks"}, keep_dense=use_pallas)}
     shared = params.get("shared")
 
     if tokens is not None:
@@ -202,7 +209,8 @@ def forward(params: Dict[str, Any], cfg: ModelConfig, *,
                                 scale_by_dim=cfg.scale_embed)
         x = x.astype(jnp.bfloat16)
     else:
-        x = common.dense(embeds.astype(jnp.bfloat16), params["in_proj"])
+        x = common.dense(embeds.astype(jnp.bfloat16), params["in_proj"],
+                         use_pallas=use_pallas)
     B, S = x.shape[:2]
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
     causal = not cfg.is_encoder
@@ -212,14 +220,17 @@ def forward(params: Dict[str, Any], cfg: ModelConfig, *,
 
     def body(x, xs_slice):
         pslice, awl = xs_slice
-        pslice = _unpack(pslice)
+        pslice = _unpack(pslice, keep_dense=use_pallas)
         for i, slot in enumerate(plan):
             if slot.kind == "mamba":
-                x = ssm.apply(pslice[slot_key(i, slot)], x, cfg)
+                x = ssm.apply(pslice[slot_key(i, slot)], x, cfg,
+                              use_pallas=use_pallas)
             elif slot.kind == "cross":
                 p = _slot_params(pslice, plan, i, slot, shared)
-                mem_k, mem_v = attention.project_memory(p, memory, cfg)
-                x = attention.cross_attend(p, x, cfg, mem_k, mem_v)
+                mem_k, mem_v = attention.project_memory(
+                    p, memory, cfg, use_pallas=use_pallas)
+                x = attention.cross_attend(p, x, cfg, mem_k, mem_v,
+                                           use_pallas=use_pallas)
             else:
                 p = _slot_params(pslice, plan, i, slot, shared)
                 x, _ = attention.attend_full(
@@ -227,7 +238,8 @@ def forward(params: Dict[str, Any], cfg: ModelConfig, *,
                     use_pallas=use_pallas)
             if slot.ffn != "none":
                 pffn = None if slot.shared else pslice[ffn_key(i, slot)]
-                x = _apply_ffn(pffn, x, cfg, slot, shared)
+                x = _apply_ffn(pffn, x, cfg, slot, shared,
+                               use_pallas=use_pallas)
             x = _maybe_qact(x, awl, slot_key(i, slot), act_wl is not None)
         return x, None
 
@@ -243,7 +255,8 @@ def forward(params: Dict[str, Any], cfg: ModelConfig, *,
     if head is None:
         logits = common.dense(x, params["embed"].T)
     else:
-        logits = common.dense(x, head, out_logical="vocab")
+        logits = common.dense(x, head, out_logical="vocab",
+                              use_pallas=use_pallas)
     logits = common.softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
     return sharding.shard(logits, "batch", "seq", "vocab")
 
@@ -306,30 +319,33 @@ def _slot_positions(C: int, t: Array) -> Array:
 
 def decode_step(params: Dict[str, Any], cfg: ModelConfig, token: Array,
                 caches: Dict[str, Any], t: Array, *,
-                act_wl: Optional[Dict[str, Array]] = None
+                act_wl: Optional[Dict[str, Array]] = None,
+                use_pallas: bool = False
                 ) -> Tuple[Array, Dict[str, Any]]:
     """token: (B,) int32; t: () int32 current absolute position.
     Returns (logits (B, V), new caches)."""
     plan, np_ = build_plan(cfg)
     params = {**params, **_unpack({k: v for k, v in params.items()
-                                   if k != "blocks"})}
+                                   if k != "blocks"}, keep_dense=use_pallas)}
     shared = params.get("shared")
     x = common.embed_lookup(params["embed"], token[:, None],
                             scale_by_dim=cfg.scale_embed).astype(jnp.bfloat16)
 
     def body(x, xs_slice):
         pslice, cslice, awl = xs_slice
-        pslice = _unpack(pslice)
+        pslice = _unpack(pslice, keep_dense=use_pallas)
         new_c = {}
         for i, slot in enumerate(plan):
             key = slot_key(i, slot)
             if slot.kind == "mamba":
-                x, nc = ssm.apply_decode(pslice[key], x, cfg, cslice[key])
+                x, nc = ssm.apply_decode(pslice[key], x, cfg, cslice[key],
+                                         use_pallas=use_pallas)
                 new_c[key] = nc
             elif slot.kind == "cross":
                 p = _slot_params(pslice, plan, i, slot, shared)
                 x = attention.cross_attend(p, x, cfg, cslice[key]["k"],
-                                           cslice[key]["v"])
+                                           cslice[key]["v"],
+                                           use_pallas=use_pallas)
                 new_c[key] = cslice[key]
             else:
                 p = _slot_params(pslice, plan, i, slot, shared)
@@ -337,11 +353,12 @@ def decode_step(params: Dict[str, Any], cfg: ModelConfig, token: Array,
                 spos = _slot_positions(C, t)
                 x, (ck, cv) = attention.attend_decode(
                     p, x, cfg, cslice[key]["k"], cslice[key]["v"], spos, t,
-                    window=slot.window)
+                    window=slot.window, use_pallas=use_pallas)
                 new_c[key] = {"k": ck, "v": cv}
             if slot.ffn != "none":
                 pffn = None if slot.shared else pslice[ffn_key(i, slot)]
-                x = _apply_ffn(pffn, x, cfg, slot, shared, dropless=True)
+                x = _apply_ffn(pffn, x, cfg, slot, shared, dropless=True,
+                               use_pallas=use_pallas)
             x = _maybe_qact(x, awl, key, act_wl is not None)
         return x, new_c
 
@@ -351,7 +368,8 @@ def decode_step(params: Dict[str, Any], cfg: ModelConfig, token: Array,
 
     x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params.get("head")
-    logits = common.dense(x, params["embed"].T if head is None else head)
+    logits = common.dense(x, params["embed"].T if head is None else head,
+                          use_pallas=use_pallas)
     logits = common.softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
     return logits[:, 0], new_caches
 
@@ -378,7 +396,7 @@ def prefill(params: Dict[str, Any], cfg: ModelConfig, tokens: Array, *,
     """Process the prompt, returning (last-position logits (B,V), caches)."""
     plan, np_ = build_plan(cfg)
     params = {**params, **_unpack({k: v for k, v in params.items()
-                                   if k != "blocks"})}
+                                   if k != "blocks"}, keep_dense=use_pallas)}
     shared = params.get("shared")
     x = common.embed_lookup(params["embed"], tokens,
                             scale_by_dim=cfg.scale_embed).astype(jnp.bfloat16)
@@ -387,19 +405,22 @@ def prefill(params: Dict[str, Any], cfg: ModelConfig, tokens: Array, *,
 
     def body(x, xs_slice):
         pslice, awl = xs_slice
-        pslice = _unpack(pslice)
+        pslice = _unpack(pslice, keep_dense=use_pallas)
         caches = {}
         for i, slot in enumerate(plan):
             key = slot_key(i, slot)
             if slot.kind == "mamba":
-                x, st = ssm.apply(pslice[key], x, cfg, return_state=True)
+                x, st = ssm.apply(pslice[key], x, cfg, return_state=True,
+                                  use_pallas=use_pallas)
                 caches[key] = jax.tree.map(
                     lambda a: a.astype(cache_dtype)
                     if a.dtype != jnp.float32 else a, st)
             elif slot.kind == "cross":
                 p = _slot_params(pslice, plan, i, slot, shared)
-                mk, mv = attention.project_memory(p, memory, cfg)
-                x = attention.cross_attend(p, x, cfg, mk, mv)
+                mk, mv = attention.project_memory(p, memory, cfg,
+                                                  use_pallas=use_pallas)
+                x = attention.cross_attend(p, x, cfg, mk, mv,
+                                           use_pallas=use_pallas)
                 caches[key] = {"k": mk.astype(cache_dtype),
                                "v": mv.astype(cache_dtype)}
             else:
@@ -412,7 +433,8 @@ def prefill(params: Dict[str, Any], cfg: ModelConfig, tokens: Array, *,
                                "v": _roll_into_cache(v, C).astype(cache_dtype)}
             if slot.ffn != "none":
                 pffn = None if slot.shared else pslice[ffn_key(i, slot)]
-                x = _apply_ffn(pffn, x, cfg, slot, shared)
+                x = _apply_ffn(pffn, x, cfg, slot, shared,
+                               use_pallas=use_pallas)
             x = _maybe_qact(x, awl, key, act_wl is not None)
         return x, caches
 
@@ -420,7 +442,8 @@ def prefill(params: Dict[str, Any], cfg: ModelConfig, tokens: Array, *,
         body, x, (params["blocks"], act_wl if act_wl is not None else {}))
     x = common.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
     head = params.get("head")
-    logits = common.dense(x, params["embed"].T if head is None else head)
+    logits = common.dense(x, params["embed"].T if head is None else head,
+                          use_pallas=use_pallas)
     logits = common.softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
     return logits[:, 0], caches
 

@@ -83,7 +83,8 @@ class ContinuousBatcher:
         def one(tok, pos, cache_row):
             cache1 = jax.tree.map(lambda a: a[:, None], cache_row)
             logits, new1 = transformer.decode_step(
-                qparams, m, tok[None], cache1, pos)
+                qparams, m, tok[None], cache1, pos,
+                use_pallas=self.cfg.quant.use_pallas)
             return logits[0], jax.tree.map(lambda a: a[:, 0], new1)
 
         # move the batch axis (dim 1 of (NP, B, ...)) to the front for vmap

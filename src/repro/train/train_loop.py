@@ -83,14 +83,19 @@ def _task_loss(cfg: Config, qparams, stats, batch, act_wl=None,
         targets, shift = batch["tokens"], True
     if m.cross_attn_every:
         kwargs["memory"] = batch["memory"]
-    # This forward sits under value_and_grad; the forward kernels carry
-    # custom VJPs whose backward passes are themselves Pallas kernels
-    # (flash_attention._flash_dq/_dkv_kernel), so quant.use_pallas covers
-    # the differentiated train step too — not just the precision machinery.
-    # Remaining exclusions: dynamic-window attention slots (traced window →
-    # masked XLA path in attend_full), the CNN family's conv forward, and
-    # the dense layers (fxp_matmul's VJP exists but isn't wired into
-    # models/common.dense yet — ROADMAP).
+    # This forward sits under value_and_grad; every forward kernel carries
+    # a custom VJP whose backward passes are themselves Pallas kernels, so
+    # quant.use_pallas covers the differentiated train step end to end:
+    # flash attention (_flash_dq/_dkv_kernel) AND the dense layers — with
+    # container_dtype="int8_packed" the packed/prologue leaves survive to
+    # models/common.dense, which streams int8 weight tiles into the fxp
+    # matmul kernels (dx via the same tiles transposed, straight-through
+    # dw = xᵀ@dy onto the master; tests/test_dense_path.py pins fwd+dx+dw
+    # per dense layer and zero dequantized-weight XLA matmuls). Remaining
+    # exclusions: dynamic-window attention slots (traced window → masked
+    # XLA path in attend_full), the CNN family's conv forward, and
+    # non-dense quantized leaves (embed/conv/MoE-expert weights —
+    # dequantized at their use site; fixed_point.DENSE_PARAM_NAMES).
     logits = transformer.forward(qparams, m, act_wl=act_wl,
                                  use_pallas=cfg.quant.use_pallas,
                                  remat=cfg.train.remat, **kwargs)
