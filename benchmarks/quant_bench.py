@@ -31,6 +31,11 @@ Hot spots, each measured XLA-reference vs fused-Pallas:
     while aligned shapes trace to the unmasked kernels — comparing the
     pairs pins the tail-mask overhead on aligned shapes at ~0.
 
+  * ``serve_degraded`` — decode-step latency at each AdaBits serving
+    level (WL 8/6/4, the overload-degradation ladder) plus the decode
+    compile count across level swaps — the zero-recompile claim behind
+    precision degradation under load, measured on the real batcher.
+
 Besides wall times the run records the *structural* facts the perf claims
 rest on, read off the jaxprs (these hold on any backend):
 
@@ -435,6 +440,43 @@ def bench_train_step(reps: int) -> dict:
     return rows
 
 
+def bench_degraded_decode(reps: int) -> dict:
+    """Decode-step latency at each AdaBits serving level (WL 8/6/4): the
+    continuous batcher's degraded-precision rows. One batcher, one jitted
+    decode; the qparams tree is swapped per level — the recorded
+    ``decode_compile_count`` pins the zero-recompile claim (all levels
+    share one treedef and one compiled executable)."""
+    from repro.config import load_config
+    from repro.serve.engine import quantize_serving_levels
+    from repro.serve.scheduler import ContinuousBatcher
+    from repro.train import train_loop
+
+    cfg = load_config("tiny")
+    state = train_loop.init_state(cfg)
+    adapt = state["adapt"]
+    levels = (8, 6, 4)
+    qlevels = quantize_serving_levels(state["params"], adapt, cfg.quant,
+                                      levels)
+    if list(qlevels) != list(levels):       # no controller state: one row
+        levels = tuple(qlevels)
+    cb = ContinuousBatcher(cfg, state["params"], adapt, slots=4,
+                           max_context=64)
+    tokens = jnp.zeros((len(cb.slots),), jnp.int32)
+    positions = jnp.zeros((len(cb.slots),), jnp.int32)
+    rows = {}
+    for wl in levels:
+        qp = qlevels[wl]
+        t = _time(lambda: cb._decode(qp, tokens, cb.caches, positions)[0],
+                  reps=reps)
+        rows[f"wl{wl}"] = {"decode_ms": t * 1e3}
+        print(f"  decode   WL={wl}: {t * 1e3:8.2f} ms/step "
+              f"({len(cb.slots)} slots)")
+    rows["decode_compile_count"] = int(cb._decode._cache_size())
+    print(f"  decode   compile count across levels: "
+          f"{rows['decode_compile_count']} (recompile-free swap)")
+    return rows
+
+
 def run(quick: bool = False, out: str = "BENCH_quant.json",
         skip_fwd_bwd: bool = False) -> dict:
     print("\n== Precision-machinery microbenchmark ==")
@@ -457,6 +499,7 @@ def run(quick: bool = False, out: str = "BENCH_quant.json",
                         MATMUL_SIZES_QUICK if quick else MATMUL_SIZES,
                         ATTN_SIZES_QUICK if quick else ATTN_SIZES, reps)),
         "train_step": bench_train_step(2 if quick else 3),
+        "serve_degraded": bench_degraded_decode(2 if quick else 3),
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)

@@ -206,6 +206,48 @@ class QuantConfig:
 
 
 # ---------------------------------------------------------------------------
+# Serving (admission control / overload behavior / degradation)
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Overload/robustness knobs for the continuous batcher (serve/).
+
+    Admission control: the queue is bounded (``max_queue``; 0 = unbounded)
+    and prompts that cannot fit ``max_context`` are rejected at submit()
+    with a typed reason instead of silently wrapping the ring cache.
+    ``default_timeout`` (seconds, 0 = off) attaches a deadline to requests
+    submitted without one; queued requests whose deadline passes are
+    expired with status ``timed_out``.
+
+    Fault handling: a request whose slot produces non-finite logits (or
+    whose decode step raises transiently) is re-admitted from scratch up to
+    ``retry_budget`` times before being marked ``failed``; a raising decode
+    is retried in-step ``transient_retries`` times first.
+
+    Degradation (AdaBits-style, 1912.09666): under queue pressure the
+    batcher swaps the active qparams tree to a lower word length from
+    ``degrade_levels`` (descending; pre-materialized at load — same pytree
+    structure, so the jitted decode never recompiles) and recovers when the
+    queue drains, with ``degrade_patience`` consecutive observations of
+    pressure/drain required per step (hysteresis). Pressure = queue depth
+    ≥ ``degrade_high_watermark`` or (if ``degrade_p95_ms`` > 0) p95 queue
+    wait above it; drain = depth ≤ ``degrade_low_watermark``."""
+    slots: int = 4
+    max_context: int = 256
+    max_queue: int = 64
+    default_timeout: float = 0.0
+    retry_budget: int = 2
+    transient_retries: int = 2
+    journal_dir: str = ""             # append-only request journal ("" = off)
+    degrade_levels: Tuple[int, ...] = (8, 6, 4)
+    degrade_high_watermark: int = 8
+    degrade_low_watermark: int = 1
+    degrade_p95_ms: float = 0.0
+    degrade_patience: int = 2
+
+
+# ---------------------------------------------------------------------------
 # Optimizer / training
 
 
@@ -294,6 +336,7 @@ class Config:
     optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
     train: TrainConfig = field(default_factory=TrainConfig)
     mesh: MeshConfig = field(default_factory=MeshConfig)
+    serve: ServeConfig = field(default_factory=ServeConfig)
 
 
 # ---------------------------------------------------------------------------

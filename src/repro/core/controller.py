@@ -507,6 +507,25 @@ def strip_packed_grads(grads: PyTree) -> PyTree:
         grads, is_leaf=is_q)
 
 
+def clamp_adapt_state(state: Dict[str, Any], max_wl) -> Dict[str, Any]:
+    """AdaBits-style (1912.09666) serve-time view of the controller state:
+    every tensor's WL clamped to ``max_wl``, FL reduced by the same amount
+    so the integer range (max|w| representability) is preserved and only
+    fractional LSBs are dropped — the same set of master weights served at
+    a coarser grid. Tensors already at or below ``max_wl`` are untouched.
+    Returns a NEW state dict; the trained controller state is never
+    mutated, and the result has the same pytree structure/dtypes as the
+    input, so quantized copies produced from different clamp levels are
+    structurally identical (swap without recompiling)."""
+    max_wl = jnp.int32(max_wl)
+    tensors = {}
+    for path, ts in state["tensors"].items():
+        wl = ts["wl"]
+        new_wl = jnp.minimum(wl, max_wl)
+        tensors[path] = {**ts, "wl": new_wl, "fl": ts["fl"] - (wl - new_wl)}
+    return {**state, "tensors": tensors}
+
+
 def snapshot(state: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:
     """Host-side summary {path: {wl, fl, sp, lb, res}} for logging and the
     paper's analytical performance model (eq. 6–9 need lb and r too)."""

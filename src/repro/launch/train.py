@@ -19,7 +19,8 @@ import jax
 from repro.config import load_config
 from repro.train import train_loop
 from repro.train.checkpoint import CheckpointManager
-from repro.train.fault_tolerance import PreemptionGuard, StepWatchdog
+from repro.train.fault_tolerance import (Heartbeat, PreemptionGuard,
+                                         StepWatchdog)
 
 
 def main(argv=None):
@@ -72,15 +73,15 @@ def main(argv=None):
                                        run_name=args.arch.replace("/", "_"))
 
     telemetry: list = []
+    # the guard + heartbeat are wired INTO the loop: SIGTERM mid-run saves
+    # a final checkpoint at the interrupted step and returns early, rather
+    # than being noticed only after all steps complete
     with PreemptionGuard() as guard:
         state, history = train_loop.train(
             cfg, steps=args.steps, state=state, checkpoint_mgr=mgr,
             watchdog=watchdog, telemetry=telemetry,
-            metrics_logger=metrics_logger)
-        if guard.requested and mgr is not None:
-            mgr.save(state, step=int(state["step"]))
-            mgr.wait()
-            print("[train] preemption checkpoint written")
+            metrics_logger=metrics_logger, preemption_guard=guard,
+            heartbeat=Heartbeat())
     if metrics_logger is not None:
         metrics_logger.log_event("finished", steps=int(state["step"]))
         metrics_logger.close()

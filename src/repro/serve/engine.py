@@ -29,9 +29,11 @@ from repro.models import transformer
 Array = jax.Array
 
 
-def quantize_for_serving(params, adapt_state, qcfg):
+def quantize_for_serving(params, adapt_state, qcfg, max_wl=None):
     """One-shot weight quantization at the final ⟨WL,FL⟩ (deterministic —
-    nearest rounding; SR is a training-time device).
+    nearest rounding; SR is a training-time device). ``max_wl`` optionally
+    clamps every tensor's word length first (AdaBits-style degraded
+    serving; see ``controller.clamp_adapt_state``).
 
     With ``container_dtype="int8_packed"`` the engine serves from the SAME
     packed tree format the train step uses — dense layers feed int8 words
@@ -45,12 +47,50 @@ def quantize_for_serving(params, adapt_state, qcfg):
     once, at load."""
     if not adapt_state or not adapt_state.get("tensors"):
         return params
+    if max_wl is not None:
+        adapt_state = controller.clamp_adapt_state(adapt_state, max_wl)
     if qcfg.container_dtype == "int8_packed":
         import dataclasses
         qcfg = dataclasses.replace(qcfg, dense_prologue=False)
         return controller.quantize_params_packed(params, adapt_state, qcfg,
                                                  key=None)
     return controller.quantize_params(params, adapt_state, qcfg, key=None)
+
+
+def quantize_serving_levels(params, adapt_state, qcfg, levels):
+    """Pre-materialize one quantized word set per serving word length
+    (AdaBits: one set of trained weights served at multiple bit-widths).
+    Returns {wl: qparams} for ``levels`` (descending WL, levels[0] = full
+    precision). Every level is produced by the same deterministic
+    requantization with the controller state WL-clamped, so all trees are
+    STRUCTURALLY IDENTICAL (same treedef, leaf shapes, and dtypes) — the
+    batcher swaps the active tree between decode steps and the jitted
+    decode never recompiles. Structural identity is asserted here, at
+    load, rather than discovered as a recompile at peak load.
+
+    Without controller state there is nothing to requantize: the single
+    passthrough tree is returned under levels[0]."""
+    levels = tuple(levels)
+    if not levels:
+        raise ValueError("quantize_serving_levels: empty level ladder")
+    if not adapt_state or not adapt_state.get("tensors"):
+        return {levels[0]: quantize_for_serving(params, adapt_state, qcfg)}
+    out = {wl: quantize_for_serving(params, adapt_state, qcfg, max_wl=wl)
+           for wl in levels}
+    ref_struct = jax.tree_util.tree_structure(out[levels[0]])
+    ref_leaves = jax.tree_util.tree_leaves(out[levels[0]])
+    for wl in levels[1:]:
+        if jax.tree_util.tree_structure(out[wl]) != ref_struct:
+            raise AssertionError(
+                f"serving level WL={wl} produced a different pytree "
+                "structure than the full-precision level — swapping it in "
+                "would recompile the decode step")
+        for a, b in zip(ref_leaves, jax.tree_util.tree_leaves(out[wl])):
+            if a.shape != b.shape or a.dtype != b.dtype:
+                raise AssertionError(
+                    f"serving level WL={wl}: leaf {a.shape}/{a.dtype} vs "
+                    f"{b.shape}/{b.dtype} — precision swap would recompile")
+    return out
 
 
 def make_prefill(cfg: Config):

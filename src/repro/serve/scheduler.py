@@ -13,26 +13,64 @@ Per-slot state lives in the shared caches at distinct batch rows; admission
 tokens (CPU-friendly and shape-stable; on TPU a dedicated row-prefill with
 the full prefill kernel would amortize this — noted in DESIGN.md).
 
-Fault tolerance: the scheduler is in-memory per replica; on replica loss,
-un-finished requests are simply re-admitted elsewhere (serving state is
-reconstructible from the request log — no checkpoints needed).
+Overload & fault behavior (docs/serving.md has the full contract):
+
+* Every submitted request reaches EXACTLY ONE typed terminal status —
+  ``ok | rejected | timed_out | evicted | failed`` — recorded in
+  ``ContinuousBatcher.terminal``. Admission control rejects over-long
+  prompts (they would silently wrap the ring cache) and queue-full
+  submissions at ``submit()``; queued requests whose deadline passes are
+  expired as ``timed_out``.
+* Fault tolerance: serving state is reconstructible from the request
+  JOURNAL (``serve/journal.py`` — append-only, flushed per event). On
+  replica loss, ``ContinuousBatcher.recover`` rebuilds a batcher that
+  re-admits every request the dead replica never finished. A slot whose
+  decode produces non-finite logits is quarantined (cache row reset) and
+  its request re-admitted from scratch within a bounded per-request retry
+  budget; transient decode errors are retried in-step first.
+* Degradation (AdaBits-style): under queue pressure a
+  ``serve/policy.PrecisionPolicy`` drops the serving word length; the
+  batcher swaps between pre-materialized qparam trees of identical pytree
+  structure, so the jitted decode NEVER recompiles across precision
+  switches.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-import itertools
-from typing import Dict, List, Optional
+import enum
+import time
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import Config
-from repro.core import controller
 from repro.models import transformer
-from repro.serve.engine import quantize_for_serving, sample
+from repro.serve.engine import (quantize_for_serving,
+                                quantize_serving_levels, sample)
+from repro.serve.faults import FaultInjector, TransientDecodeError
+from repro.serve.journal import RequestJournal
+from repro.serve.policy import PrecisionPolicy
 
 Array = jax.Array
+
+
+class Status(str, enum.Enum):
+    """Request lifecycle. PENDING/ACTIVE are transient; the rest are the
+    typed TERMINAL statuses of the serving contract."""
+    PENDING = "pending"        # queued, not yet in a slot
+    ACTIVE = "active"          # owns a slot
+    OK = "ok"                  # completed its token budget / EOS
+    REJECTED = "rejected"      # refused at admission (typed ``reason``)
+    TIMED_OUT = "timed_out"    # deadline passed while queued
+    EVICTED = "evicted"        # replica shutdown; re-admittable elsewhere
+    FAILED = "failed"          # decode faults exhausted the retry budget
+
+
+TERMINAL = frozenset((Status.OK, Status.REJECTED, Status.TIMED_OUT,
+                      Status.EVICTED, Status.FAILED))
 
 
 @dataclasses.dataclass
@@ -42,9 +80,30 @@ class Request:
     max_new_tokens: int
     temperature: float = 0.0
     eos_id: Optional[int] = None
+    deadline: Optional[float] = None    # absolute, on the batcher's clock
+    submit_time: float = 0.0
     # filled by the scheduler
     output: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+    status: Status = Status.PENDING
+    reason: str = ""                    # set with REJECTED/TIMED_OUT/FAILED
+    retries_left: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.status in TERMINAL
+
+
+class DrainTimeout(RuntimeError):
+    """``run_until_drained`` hit its step budget with work still in
+    flight. Carries the drain report instead of silently stranding it."""
+
+    def __init__(self, unfinished, done, steps):
+        self.unfinished = tuple(unfinished)   # rids still queued/active
+        self.done = done                      # requests finished so far
+        self.steps = steps
+        super().__init__(
+            f"run_until_drained: {len(self.unfinished)} request(s) still "
+            f"in flight after {steps} steps: {sorted(self.unfinished)}")
 
 
 @dataclasses.dataclass
@@ -59,19 +118,64 @@ class _Slot:
 
 
 class ContinuousBatcher:
+    """Explicit kwargs override ``cfg.serve``; ``clock`` must be monotonic
+    (injectable for deterministic deadline tests)."""
+
     def __init__(self, cfg: Config, params, adapt_state=None, *,
-                 slots: int = 4, max_context: int = 256, seed: int = 0):
+                 slots: Optional[int] = None,
+                 max_context: Optional[int] = None, seed: int = 0,
+                 max_queue: Optional[int] = None,
+                 retry_budget: Optional[int] = None,
+                 transient_retries: Optional[int] = None,
+                 default_timeout: Optional[float] = None,
+                 policy: Optional[PrecisionPolicy] = None,
+                 faults: Optional[FaultInjector] = None,
+                 journal_path: str = "",
+                 clock: Callable[[], float] = time.monotonic):
+        scfg = cfg.serve
         self.cfg = cfg
         self.m = cfg.model
-        self.slots = [_Slot() for _ in range(slots)]
-        self.max_context = max_context
-        self.qparams = quantize_for_serving(params, adapt_state or {},
-                                            cfg.quant)
+        n_slots = slots if slots is not None else scfg.slots
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.max_context = (max_context if max_context is not None
+                            else scfg.max_context)
+        self.max_queue = max_queue if max_queue is not None else scfg.max_queue
+        self.retry_budget = (retry_budget if retry_budget is not None
+                             else scfg.retry_budget)
+        self.transient_retries = (transient_retries
+                                  if transient_retries is not None
+                                  else scfg.transient_retries)
+        self.default_timeout = (default_timeout if default_timeout is not None
+                                else scfg.default_timeout)
+        self.clock = clock
+        self.policy = policy
+        self.faults = faults
+        self.journal = RequestJournal(journal_path) if journal_path else None
+        adapt_state = adapt_state or {}
+        # AdaBits degradation: one pre-materialized word set per level,
+        # structurally identical trees (asserted at load), swapped between
+        # steps. Without a policy (or without controller state) there is a
+        # single tree and the swap machinery is inert.
+        if policy is not None:
+            self.qparam_levels = quantize_serving_levels(
+                params, adapt_state, cfg.quant, policy.levels)
+            self.active_wl = next(iter(self.qparam_levels))
+            self.qparams = self.qparam_levels[self.active_wl]
+        else:
+            self.qparam_levels = {}
+            self.active_wl = None
+            self.qparams = quantize_for_serving(params, adapt_state,
+                                                cfg.quant)
         self.queue: collections.deque = collections.deque()
-        self._rid = itertools.count()
+        self.terminal: Dict[int, Request] = {}   # rid → request, set once
+        self.wl_trace: List[int] = []            # active WL per step
+        self.stats = collections.Counter()
+        self._next_rid = 0
         self._key = jax.random.PRNGKey(seed)
         self._step_i = 0
-        self.caches = transformer.init_caches(self.m, slots, max_context)
+        self._waits: collections.deque = collections.deque(maxlen=256)
+        self.caches = transformer.init_caches(self.m, n_slots,
+                                              self.max_context)
         # one decode step over the whole slot pool; per-slot positions
         self._decode = jax.jit(self._decode_fn)
 
@@ -97,32 +201,72 @@ class ContinuousBatcher:
     # -- public API ----------------------------------------------------------
 
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
-               temperature: float = 0.0, eos_id: Optional[int] = None) -> int:
-        req = Request(next(self._rid), list(prompt), max_new_tokens,
-                      temperature, eos_id)
+               temperature: float = 0.0, eos_id: Optional[int] = None, *,
+               deadline: Optional[float] = None,
+               timeout: Optional[float] = None,
+               rid: Optional[int] = None) -> Request:
+        """Admit a request (returns it, possibly already REJECTED with a
+        typed ``reason``). ``timeout`` is seconds-from-now sugar for
+        ``deadline``; ``cfg.serve.default_timeout`` applies when neither
+        is given. ``rid`` is for journal replay only."""
+        now = self.clock()
+        if timeout is None and deadline is None and self.default_timeout > 0:
+            timeout = self.default_timeout
+        if deadline is None and timeout is not None:
+            deadline = now + timeout
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid + 1)
+        req = Request(rid, list(prompt), max_new_tokens, temperature, eos_id,
+                      deadline=deadline, submit_time=now,
+                      retries_left=self.retry_budget)
+        self.stats["submitted"] += 1
+        if self.journal is not None:
+            self.journal.record_submit(req)
+        if len(req.prompt) >= self.max_context:
+            # an over-long prompt would drain ``pending`` while ``pos``
+            # wraps the ring cache, corrupting the slot — refuse it here
+            self._finish(req, Status.REJECTED, "prompt_too_long")
+            return req
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            self._finish(req, Status.REJECTED, "queue_full")
+            return req
         self.queue.append(req)
-        return req.rid
+        return req
 
     def step(self) -> List[Request]:
-        """Admit, decode one token for every active slot, retire finished.
-        Returns requests completed during this step."""
-        self._admit()
+        """Expire, (maybe) swap precision, admit, decode one token for
+        every active slot, retire finished. Returns every request that
+        reached a terminal status during this step."""
+        now = self.clock()
+        finished = self._expire(now)
+        if self.policy is not None:
+            self._observe_policy()
+        self._admit(now)
         active = [i for i, s in enumerate(self.slots) if not s.free]
         if not active:
-            return []
+            return finished
         tokens = jnp.asarray(
             [s.pending.pop(0) if s.pending else (s.request.output[-1]
              if not s.free and s.request.output else 0)
              for s in self.slots], jnp.int32)
         positions = jnp.asarray([s.pos for s in self.slots], jnp.int32)
-        logits, self.caches = self._decode(self.qparams, tokens,
-                                           self.caches, positions)
+        try:
+            logits, self.caches = self._guarded_decode(tokens, positions)
+        except TransientDecodeError as e:
+            self._step_i += 1
+            return finished + self._fault_all_active(str(e))
         self._step_i += 1
         key = jax.random.fold_in(self._key, self._step_i)
         next_tokens = sample(logits, key, 0.0)
-        finished = []
+        # non-finite logits = corrupted slot state (bad cache row / flipped
+        # bit): quarantine before any token from it reaches an output
+        finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
         for i, slot in enumerate(self.slots):
             if slot.free:
+                continue
+            if not finite[i]:
+                finished += self._quarantine(i, "non_finite_logits")
                 continue
             slot.pos += 1
             if slot.pending:        # still consuming the prompt
@@ -137,26 +281,114 @@ class ContinuousBatcher:
             hit_eos = req.eos_id is not None and tok == req.eos_id
             if len(req.output) >= req.max_new_tokens or hit_eos or \
                     slot.pos >= self.max_context - 1:
-                req.done = True
+                self._finish(req, Status.OK)
                 finished.append(req)
                 self.slots[i] = _Slot()     # slot returns to the pool
         return finished
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        """Step until queue and slots are empty; returns the requests that
+        reached a terminal status. Raises ``DrainTimeout`` (naming the
+        stranded request ids, with the partial results attached) instead
+        of silently returning with work still in flight."""
         done: List[Request] = []
         for _ in range(max_steps):
             done += self.step()
             if not self.queue and all(s.free for s in self.slots):
-                break
-        return done
+                return done
+        raise DrainTimeout(self._in_flight_rids(), done, max_steps)
+
+    def evict_all(self, reason: str = "replica_shutdown") -> List[Request]:
+        """Graceful replica shutdown: every queued/active request becomes
+        ``evicted`` (terminal here; journal replay re-admits evicted
+        requests on the replacement replica)."""
+        out = []
+        for i, slot in enumerate(self.slots):
+            if not slot.free:
+                self._finish(slot.request, Status.EVICTED, reason)
+                out.append(slot.request)
+                self.slots[i] = _Slot()
+        while self.queue:
+            req = self.queue.popleft()
+            self._finish(req, Status.EVICTED, reason)
+            out.append(req)
+        return out
+
+    @classmethod
+    def recover(cls, cfg: Config, params, adapt_state=None, *,
+                journal_path: str, **kwargs) -> "ContinuousBatcher":
+        """Rebuild a batcher after replica loss: re-admit (preserving rids)
+        every journaled request that never reached a terminal status on
+        the dead replica, plus explicitly evicted ones."""
+        pending = RequestJournal.unfinished(journal_path)
+        cb = cls(cfg, params, adapt_state, journal_path=journal_path,
+                 **kwargs)
+        for ev in pending:
+            cb.submit(ev["prompt"], ev["max_new_tokens"],
+                      ev.get("temperature", 0.0), ev.get("eos_id"),
+                      deadline=ev.get("deadline"), rid=ev["rid"])
+        return cb
+
+    @property
+    def utilization(self) -> float:
+        busy = sum(not s.free for s in self.slots)
+        return busy / max(len(self.slots), 1)
+
+    def p95_wait_ms(self) -> float:
+        """p95 queue wait (submit → admission) over the recent window."""
+        if not self._waits:
+            return 0.0
+        waits = sorted(self._waits)
+        return waits[int(0.95 * (len(waits) - 1))] * 1e3
 
     # -- internals -----------------------------------------------------------
 
-    def _admit(self):
+    def _in_flight_rids(self) -> List[int]:
+        return ([r.rid for r in self.queue]
+                + [s.request.rid for s in self.slots if not s.free])
+
+    def _finish(self, req: Request, status: Status, reason: str = ""):
+        """The single terminal transition. Asserts exactly-once."""
+        if req.status in TERMINAL:
+            raise AssertionError(
+                f"request {req.rid} reached a second terminal status "
+                f"{status.value!r} (already {req.status.value!r})")
+        req.status = status
+        req.reason = reason
+        self.terminal[req.rid] = req
+        self.stats[status.value] += 1
+        if self.journal is not None:
+            self.journal.record_terminal(req)
+
+    def _expire(self, now: float) -> List[Request]:
+        """Expire queued requests whose deadline passed (typed, exact)."""
+        expired = [r for r in self.queue
+                   if r.deadline is not None and now > r.deadline]
+        if expired:
+            self.queue = collections.deque(
+                r for r in self.queue if r not in expired)
+            for req in expired:
+                self._finish(req, Status.TIMED_OUT, "deadline_expired")
+        return expired
+
+    def _observe_policy(self):
+        wl = self.policy.observe(len(self.queue), self.p95_wait_ms())
+        if wl in self.qparam_levels and wl != self.active_wl:
+            # same treedef/shapes/dtypes (asserted at load): the jitted
+            # decode sees identical avals and never recompiles
+            self.qparams = self.qparam_levels[wl]
+            self.active_wl = wl
+            self.stats["precision_switches"] += 1
+        self.wl_trace.append(self.active_wl if self.active_wl is not None
+                             else self.policy.wl)
+
+    def _admit(self, now: float):
         for i, slot in enumerate(self.slots):
             if not slot.free or not self.queue:
                 continue
             req = self.queue.popleft()
+            self._waits.append(now - req.submit_time)
+            req.status = Status.ACTIVE
             # reset this slot's cache rows, then stream the prompt through
             self.caches = jax.tree.map(
                 lambda a: a.at[:, i].set(jnp.zeros_like(a[:, i])),
@@ -164,7 +396,60 @@ class ContinuousBatcher:
             self.slots[i] = _Slot(request=req, pos=0,
                                   pending=list(req.prompt))
 
-    @property
-    def utilization(self) -> float:
-        busy = sum(not s.free for s in self.slots)
-        return busy / max(len(self.slots), 1)
+    def _guarded_decode(self, tokens, positions):
+        """Decode with fault-injection hooks and bounded in-step retry of
+        transient errors. A raising decode never touched ``self.caches``
+        (the exception propagates before assignment), so retry is safe."""
+        attempts = self.transient_retries + 1
+        for attempt in range(attempts):
+            try:
+                if self.faults is not None:
+                    self.faults.before_decode(self._step_i, attempt)
+                logits, caches = self._decode(self.qparams, tokens,
+                                              self.caches, positions)
+            except TransientDecodeError:
+                self.stats["transient_decode_errors"] += 1
+                if attempt == attempts - 1:
+                    raise
+                continue
+            if self.faults is not None:
+                logits = self.faults.corrupt_logits(self._step_i, logits)
+            return logits, caches
+
+    def _quarantine(self, i: int, reason: str) -> List[Request]:
+        """Slot ``i`` produced corrupt output: zero its cache rows so the
+        poisoned state cannot leak into a future occupant, free it, and
+        re-admit (or fail) the victim."""
+        req = self.slots[i].request
+        self.caches = jax.tree.map(
+            lambda a: a.at[:, i].set(jnp.zeros_like(a[:, i])), self.caches)
+        self.slots[i] = _Slot()
+        self.stats["quarantines"] += 1
+        return self._readmit_or_fail(req, reason)
+
+    def _fault_all_active(self, reason: str) -> List[Request]:
+        """In-step retries exhausted with no logits at all: every active
+        request is a victim. Caches were never touched by the raising
+        decode, but the slots restart their requests from scratch."""
+        out = []
+        for i, slot in enumerate(self.slots):
+            if slot.free:
+                continue
+            req = slot.request
+            self.slots[i] = _Slot()
+            out += self._readmit_or_fail(req, reason)
+        return out
+
+    def _readmit_or_fail(self, req: Request, reason: str) -> List[Request]:
+        """Bounded per-request retry: re-admit from scratch (front of the
+        queue — the victim already waited) while budget remains, else the
+        typed ``failed`` terminal."""
+        if req.retries_left > 0:
+            req.retries_left -= 1
+            req.output = []
+            req.status = Status.PENDING
+            self.queue.appendleft(req)
+            self.stats["retries"] += 1
+            return []
+        self._finish(req, Status.FAILED, reason)
+        return [req]

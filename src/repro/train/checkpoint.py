@@ -72,6 +72,7 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
@@ -79,17 +80,32 @@ class CheckpointManager:
     def save(self, state: PyTree, step: int, extra: Optional[dict] = None):
         flat = flatten_state(state)   # device_get on the caller's thread
         if self.async_save:
-            self.wait()
+            self.wait()               # re-raises a prior async failure
             self._thread = threading.Thread(
-                target=self._write, args=(flat, step, extra or {}), daemon=True)
+                target=self._write_guarded, args=(flat, step, extra or {}),
+                daemon=True)
             self._thread.start()
         else:
             self._write(flat, step, extra or {})
 
     def wait(self):
+        """Join the in-flight async save. An exception on the writer thread
+        (disk full, permissions, bad path) is captured — not swallowed by
+        the daemon thread — and re-raised HERE, so the training loop learns
+        its checkpoints are not landing at the next save/wait instead of
+        discovering an empty directory after a preemption."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise IOError(f"async checkpoint save failed: {err}") from err
+
+    def _write_guarded(self, flat, step, extra):
+        try:
+            self._write(flat, step, extra)
+        except BaseException as e:      # noqa: BLE001 — report, don't lose
+            self._error = e
 
     def _write(self, flat: Dict[str, np.ndarray], step: int, extra: dict):
         final = os.path.join(self.dir, f"step_{step:08d}")

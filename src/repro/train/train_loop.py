@@ -301,10 +301,18 @@ def train(cfg: Config, *, steps: Optional[int] = None,
           checkpoint_mgr=None, watchdog=None,
           log: Callable[[str], None] = print,
           telemetry: Optional[list] = None,
-          metrics_logger=None) -> Tuple[Dict[str, Any], list]:
+          metrics_logger=None, preemption_guard=None,
+          heartbeat=None) -> Tuple[Dict[str, Any], list]:
     """Run the loop; returns (state, history). ``telemetry`` (if a list)
     collects per-switch controller snapshots for the paper's perf model;
-    ``metrics_logger`` (train.metrics.MetricsLogger) streams JSONL."""
+    ``metrics_logger`` (train.metrics.MetricsLogger) streams JSONL.
+
+    ``preemption_guard`` (fault_tolerance.PreemptionGuard): checked after
+    every step — a SIGTERM triggers one final checkpoint save (when a
+    ``checkpoint_mgr`` is present) and a clean early return, honoring the
+    preempt→final-checkpoint contract INSIDE the loop rather than after
+    all ``steps`` complete. ``heartbeat`` (fault_tolerance.Heartbeat)
+    emits liveness lines on its own interval."""
     steps = steps if steps is not None else cfg.train.steps
     if state is None:
         state = init_state(cfg)
@@ -341,4 +349,13 @@ def train(cfg: Config, *, steps: Optional[int] = None,
         if checkpoint_mgr is not None and cfg.train.checkpoint_every and \
                 (i + 1) % cfg.train.checkpoint_every == 0:
             checkpoint_mgr.save(state, step=i + 1)
+        if heartbeat is not None:
+            heartbeat.beat(i + 1, extra=f"loss={float(metrics['loss']):.4f}")
+        if preemption_guard is not None and preemption_guard.requested:
+            log(f"[preempt] SIGTERM at step {i + 1}: saving final "
+                "checkpoint and exiting")
+            if checkpoint_mgr is not None:
+                checkpoint_mgr.save(state, step=i + 1)
+                checkpoint_mgr.wait()
+            break
     return state, history

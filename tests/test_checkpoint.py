@@ -1,0 +1,174 @@
+"""Checkpoint robustness: full AdaPT-state restore (int32 ⟨WL,FL⟩ leaves,
+packed containers), CRC/torn-write paths, async-save error surfacing, and
+the SIGTERM→final-checkpoint preemption contract with resume parity."""
+import dataclasses
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import load_config
+from repro.train import train_loop
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import Heartbeat, PreemptionGuard
+
+
+def _cfg(container="float32", **train_kw):
+    cfg = load_config("tiny")
+    return dataclasses.replace(
+        cfg,
+        train=dataclasses.replace(cfg.train, adapt_interval=2, **train_kw),
+        quant=dataclasses.replace(cfg.quant, container_dtype=container))
+
+
+def _adapt_leaves(state):
+    return {path: ts for path, ts in state["adapt"]["tensors"].items()}
+
+
+# ---------------------------------------------------------------------------
+# Full AdaPT state restore
+
+
+@pytest.mark.parametrize("container", ["float32", "int8_packed"])
+def test_restore_preserves_adapt_state_exactly(container, tmp_path):
+    """The controller's int32 ⟨WL,FL⟩ / lookback / resolution leaves must
+    survive the npz round trip bit-exactly (they drive requantization —
+    a float detour would silently corrupt precision choices), for both
+    the simulate-grid and the packed-int8 container configs."""
+    cfg = _cfg(container)
+    state, _ = train_loop.train(cfg, steps=6, log=lambda s: None)
+    assert state["adapt"]["tensors"], "controller state empty — bad setup"
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(state, step=6)
+    restored = mgr.restore(train_loop.init_state(cfg))
+
+    for path, ts in _adapt_leaves(state).items():
+        rts = restored["adapt"]["tensors"][path]
+        for field in ("wl", "fl", "lb", "res"):
+            assert rts[field].dtype == jnp.int32, (path, field)
+            np.testing.assert_array_equal(np.asarray(ts[field]),
+                                          np.asarray(rts[field]),
+                                          err_msg=f"{path}.{field}")
+        for field in ("count", "norm_sum", "grad_sum"):
+            np.testing.assert_allclose(np.asarray(ts[field], np.float32),
+                                       np.asarray(rts[field], np.float32),
+                                       err_msg=f"{path}.{field}")
+    # resumed training must run (precision switches included) from the
+    # restored controller state without error and advance the step counter
+    st2, _ = train_loop.train(cfg, steps=4, state=restored,
+                              log=lambda s: None)
+    assert int(st2["step"]) == 10
+
+
+def test_restore_missing_done_falls_back(tmp_path):
+    cfg = _cfg()
+    state, _ = train_loop.train(cfg, steps=2, log=lambda s: None)
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(state, step=2)
+    st4, _ = train_loop.train(cfg, steps=2, state=state, log=lambda s: None)
+    mgr.save(st4, step=4)
+    os.remove(tmp_path / "step_00000004" / "DONE")   # simulated torn write
+    assert mgr.latest_step() == 2
+    restored = mgr.restore(train_loop.init_state(cfg))
+    assert int(restored["step"]) == 2
+
+
+def test_restore_crc_mismatch_raises(tmp_path):
+    cfg = _cfg()
+    state, _ = train_loop.train(cfg, steps=2, log=lambda s: None)
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(state, step=2)
+    npz = tmp_path / "step_00000002" / "arrays.npz"
+    data = bytearray(npz.read_bytes())
+    data[len(data) // 2] ^= 0xFF                     # flip a payload bit
+    npz.write_bytes(bytes(data))
+    with pytest.raises(IOError, match="CRC"):
+        mgr.restore(train_loop.init_state(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Async-save error surfacing
+
+
+def test_async_save_failure_surfaces_on_wait(tmp_path):
+    """A failing writer thread must not die silently: the error is
+    re-raised on the next wait()/save(), and the manager recovers for
+    subsequent saves once the cause is fixed."""
+    cfg = _cfg()
+    state, _ = train_loop.train(cfg, steps=2, log=lambda s: None)
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    # point the writer at a path whose parent is a regular FILE — makedirs
+    # raises on any platform, even running as root (chmod won't stop root)
+    blocker = tmp_path / "blocker"
+    blocker.write_text("not a directory")
+    mgr.dir = str(blocker / "nested")
+    mgr.save(state, step=2)
+    with pytest.raises(IOError, match="async checkpoint save failed"):
+        mgr.wait()
+    # the error is consumed: the manager works again at a good path
+    mgr.dir = str(tmp_path)
+    mgr.save(state, step=2)
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+def test_async_save_failure_surfaces_on_next_save(tmp_path):
+    cfg = _cfg()
+    state, _ = train_loop.train(cfg, steps=2, log=lambda s: None)
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    blocker = tmp_path / "blocker"
+    blocker.write_text("x")
+    mgr.dir = str(blocker / "nested")
+    mgr.save(state, step=2)
+    mgr._thread.join()          # let the failure land without consuming it
+    mgr.dir = str(tmp_path)
+    with pytest.raises(IOError, match="async checkpoint save failed"):
+        mgr.save(state, step=3)
+
+
+# ---------------------------------------------------------------------------
+# Preemption contract
+
+
+def test_sigterm_saves_final_checkpoint_and_resume_matches(tmp_path):
+    """SIGTERM mid-loop → the loop saves a final checkpoint at the
+    interrupted step and returns early (the wired-in contract). Training
+    resumed from that checkpoint must match an uninterrupted run exactly
+    (batches and SR noise key off the step index, so the trajectory is
+    deterministic)."""
+    cfg = _cfg(checkpoint_every=100)    # periodic saves out of the way
+
+    # uninterrupted 6-step reference
+    ref_state, _ = train_loop.train(cfg, steps=6, log=lambda s: None)
+
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    fired = []
+
+    def emit(line):
+        if "step=3 " in line and not fired:
+            fired.append(True)
+            os.kill(os.getpid(), signal.SIGTERM)
+
+    with PreemptionGuard() as guard:
+        st, _ = train_loop.train(cfg, steps=6, checkpoint_mgr=mgr,
+                                 preemption_guard=guard,
+                                 heartbeat=Heartbeat(interval=0.0,
+                                                     emit=emit),
+                                 log=lambda s: None)
+    assert fired, "heartbeat never reached step 3"
+    assert int(st["step"]) == 3          # early return, not all 6 steps
+    assert mgr.latest_step() == 3        # final checkpoint landed
+
+    restored = mgr.restore(train_loop.init_state(cfg))
+    resumed, _ = train_loop.train(cfg, steps=3, state=restored,
+                                  log=lambda s: None)
+    assert int(resumed["step"]) == 6
+    for a, b in zip(jax.tree_util.tree_leaves(ref_state["params"]),
+                    jax.tree_util.tree_leaves(resumed["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   err_msg="resume diverged from the "
+                                           "uninterrupted trajectory")

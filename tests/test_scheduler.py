@@ -24,9 +24,9 @@ def test_matches_static_engine():
 
     cb = ContinuousBatcher(cfg, state["params"], state["adapt"],
                            slots=2, max_context=32)
-    rid = cb.submit(prompt, max_new_tokens=6)
+    req = cb.submit(prompt, max_new_tokens=6)
     done = cb.run_until_drained()
-    out = next(r for r in done if r.rid == rid).output
+    out = next(r for r in done if r.rid == req.rid).output
     assert out == ref, (out, ref)
 
 
@@ -34,7 +34,7 @@ def test_staggered_requests_complete_and_slots_recycle():
     cfg, state = _setup()
     cb = ContinuousBatcher(cfg, state["params"], state["adapt"],
                            slots=2, max_context=32)
-    rids = [cb.submit([i + 1, i + 2, i + 3], max_new_tokens=3 + i)
+    rids = [cb.submit([i + 1, i + 2, i + 3], max_new_tokens=3 + i).rid
             for i in range(5)]   # 5 requests > 2 slots → queueing + reuse
     done = cb.run_until_drained()
     assert sorted(r.rid for r in done) == sorted(rids)
@@ -58,8 +58,8 @@ def test_queue_isolation():
     ra, rb = alone(pa), alone(pb)
     cb = ContinuousBatcher(cfg, state["params"], state["adapt"],
                            slots=2, max_context=32)
-    ia = cb.submit(pa, max_new_tokens=4)
-    ib = cb.submit(pb, max_new_tokens=4)
+    ia = cb.submit(pa, max_new_tokens=4).rid
+    ib = cb.submit(pb, max_new_tokens=4).rid
     done = {r.rid: r.output for r in cb.run_until_drained()}
     assert done[ia] == ra
     assert done[ib] == rb

@@ -1,0 +1,365 @@
+"""Overload/fault robustness of the continuous batcher: admission control,
+deadlines, journal replay, fault injection, and AdaBits-style precision
+degradation. Contract under test: every submitted request reaches EXACTLY
+ONE typed terminal status — never a hang, never a silent drop — and
+precision switches never recompile the decode step."""
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import load_config
+from repro.core import controller
+from repro.serve.engine import quantize_serving_levels
+from repro.serve.faults import FaultInjector, TransientDecodeError
+from repro.serve.journal import RequestJournal
+from repro.serve.policy import PrecisionPolicy
+from repro.serve.scheduler import (ContinuousBatcher, DrainTimeout, Request,
+                                   Status, TERMINAL)
+from repro.train import train_loop
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = load_config("tiny")
+    state, _ = train_loop.train(cfg, steps=3, log=lambda s: None)
+    return cfg, state
+
+
+def _batcher(trained, **kw):
+    cfg, state = trained
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_context", 32)
+    return ContinuousBatcher(cfg, state["params"], state["adapt"], **kw)
+
+
+# ---------------------------------------------------------------------------
+# Precision policy (pure unit tests, no model)
+
+
+def test_policy_pinned_trace():
+    """Hand-verified hysteresis trace: patience=2 pressure steps down one
+    level at a time, patience=2 drained steps back up, mixed observations
+    reset, no level skipping."""
+    pol = PrecisionPolicy(levels=(8, 6, 4), high_watermark=4,
+                          low_watermark=1, patience=2)
+    depths = [0, 5, 5, 5, 5, 2, 0, 0, 0, 0, 5, 0]
+    trace = [pol.observe(d) for d in depths]
+    assert trace == [8, 8, 6, 6, 4, 4, 4, 6, 6, 8, 8, 8], trace
+
+
+def test_policy_latency_trigger_and_validation():
+    pol = PrecisionPolicy(levels=(8, 4), high_watermark=100,
+                          low_watermark=1, p95_high_ms=50.0, patience=1)
+    assert pol.observe(0, p95_wait_ms=60.0) == 4      # latency alone degrades
+    assert pol.observe(0, p95_wait_ms=0.0) == 8       # and recovers
+    with pytest.raises(ValueError):
+        PrecisionPolicy(levels=(4, 6, 8))              # not descending
+    with pytest.raises(ValueError):
+        PrecisionPolicy(levels=())
+    with pytest.raises(ValueError):
+        PrecisionPolicy(high_watermark=2, low_watermark=2)
+    with pytest.raises(ValueError):
+        PrecisionPolicy(patience=0)
+
+
+def test_clamp_adapt_state_wl_fl_arithmetic():
+    """AdaBits clamp drops fractional LSBs: WL 8→4 must take 4 bits off FL
+    (integer range preserved), and already-lower WLs are untouched."""
+    state = {"tensors": {
+        "w": {"wl": jnp.int32(8), "fl": jnp.int32(6)},
+        "v": {"wl": jnp.int32(3), "fl": jnp.int32(2)},
+    }, "strategy": jnp.int32(0)}
+    out = controller.clamp_adapt_state(state, 4)
+    assert int(out["tensors"]["w"]["wl"]) == 4
+    assert int(out["tensors"]["w"]["fl"]) == 2
+    assert int(out["tensors"]["v"]["wl"]) == 3
+    assert int(out["tensors"]["v"]["fl"]) == 2
+    assert int(state["tensors"]["w"]["wl"]) == 8       # input not mutated
+
+
+# ---------------------------------------------------------------------------
+# Admission control + deadlines
+
+
+def test_overlong_prompt_rejected_not_wrapped(trained):
+    """Regression: a prompt >= max_context used to wrap the ring cache
+    silently; it must be refused at submit with a typed reason."""
+    cb = _batcher(trained, max_context=16)
+    req = cb.submit(list(range(16)), max_new_tokens=4)
+    assert req.status is Status.REJECTED
+    assert req.reason == "prompt_too_long"
+    assert req.rid in cb.terminal
+    # boundary: max_context - 1 is admissible
+    ok = cb.submit(list(range(15)), max_new_tokens=1)
+    assert ok.status is Status.PENDING
+    done = cb.run_until_drained()
+    assert [r.status for r in done] == [Status.OK]
+
+
+def test_bounded_queue_rejects_overflow(trained):
+    cb = _batcher(trained, max_queue=3)
+    reqs = [cb.submit([1, 2, 3], max_new_tokens=2) for _ in range(5)]
+    statuses = [r.status for r in reqs]
+    assert statuses[:3] == [Status.PENDING] * 3
+    assert statuses[3:] == [Status.REJECTED] * 2
+    assert all(r.reason == "queue_full" for r in reqs[3:])
+    done = cb.run_until_drained()
+    assert sorted(r.rid for r in done) == [r.rid for r in reqs[:3]]
+
+
+def test_deadline_expires_queued_requests(trained):
+    """Fake clock: queued past-deadline requests become timed_out; an
+    admitted request is not expired retroactively."""
+    now = [0.0]
+    cb = _batcher(trained, slots=1, clock=lambda: now[0])
+    fast = cb.submit([1, 2], max_new_tokens=2)             # no deadline
+    slow = cb.submit([3, 4], max_new_tokens=2, timeout=5.0)
+    cb.step()                                              # fast admitted
+    now[0] = 10.0                                          # deadline passes
+    done = cb.run_until_drained()
+    by = {r.rid: r for r in done}
+    assert by[slow.rid].status is Status.TIMED_OUT
+    assert by[slow.rid].reason == "deadline_expired"
+    assert by[fast.rid].status is Status.OK
+
+
+def test_default_timeout_from_config(trained):
+    now = [100.0]
+    cb = _batcher(trained, default_timeout=7.0, clock=lambda: now[0])
+    req = cb.submit([1, 2], max_new_tokens=2)
+    assert req.deadline == 107.0
+    explicit = cb.submit([1, 2], max_new_tokens=2, deadline=200.0)
+    assert explicit.deadline == 200.0
+
+
+# ---------------------------------------------------------------------------
+# Drain report
+
+
+def test_drain_timeout_names_stranded_requests(trained):
+    cb = _batcher(trained, slots=1)
+    a = cb.submit([1, 2], max_new_tokens=8)
+    b = cb.submit([3, 4], max_new_tokens=8)
+    with pytest.raises(DrainTimeout) as ei:
+        cb.run_until_drained(max_steps=3)
+    assert set(ei.value.unfinished) == {a.rid, b.rid}
+    assert str(sorted(ei.value.unfinished)) in str(ei.value)
+    # the batcher is still consistent: the caller can resume the drain
+    done = cb.run_until_drained()
+    assert {r.rid for r in done} == {a.rid, b.rid}
+    assert all(r.status is Status.OK for r in done)
+
+
+# ---------------------------------------------------------------------------
+# Journal + replica-loss replay
+
+
+def test_journal_replay_after_replica_loss(trained, tmp_path):
+    """Kill a batcher mid-flight; a recovered batcher re-admits exactly
+    the unfinished requests (original rids) and finishes them."""
+    cfg, state = trained
+    jp = str(tmp_path / "journal.jsonl")
+    cb = _batcher(trained, slots=1, journal_path=jp)
+    reqs = [cb.submit([i + 1, i + 2], max_new_tokens=2) for i in range(4)]
+    for _ in range(4):          # finishes request 0, leaves 1–3 in flight
+        cb.step()
+    finished_before = set(cb.terminal)
+    assert finished_before     # at least one completed pre-crash
+    del cb                      # replica dies; only the journal survives
+
+    with open(jp, "a") as f:
+        f.write('{"ev": "terminal", "rid"')   # torn write at crash time
+
+    cb2 = ContinuousBatcher.recover(cfg, state["params"], state["adapt"],
+                                    journal_path=jp, slots=1,
+                                    max_context=32)
+    replayed = [r.rid for r in cb2.queue]
+    assert replayed == [r.rid for r in reqs if r.rid not in finished_before]
+    done = cb2.run_until_drained()
+    assert {r.rid for r in done} == set(replayed)
+    assert all(r.status is Status.OK for r in done)
+    # second recovery after a clean drain replays nothing
+    cb2.journal.close()
+    assert RequestJournal.unfinished(jp) == []
+
+
+def test_evicted_requests_are_replayable(trained, tmp_path):
+    cfg, state = trained
+    jp = str(tmp_path / "evict.jsonl")
+    cb = _batcher(trained, slots=1, journal_path=jp)
+    r0 = cb.submit([1, 2], max_new_tokens=2)
+    r1 = cb.submit([3, 4], max_new_tokens=2)
+    cb.step()
+    evicted = cb.evict_all()
+    assert {r.rid for r in evicted} == {r0.rid, r1.rid}
+    assert all(r.status is Status.EVICTED for r in evicted)
+    assert not cb.queue and all(s.free for s in cb.slots)
+    cb.journal.close()
+    assert [e["rid"] for e in RequestJournal.unfinished(jp)] == \
+        [r0.rid, r1.rid]
+
+
+# ---------------------------------------------------------------------------
+# Fault injection
+
+
+def test_nan_fault_quarantines_and_retries_to_same_output(trained):
+    """A NaN-corrupted slot is quarantined and its request restarted; the
+    retried output must equal the fault-free run (state fully reset)."""
+    clean = _batcher(trained, slots=1)
+    ref = clean.submit([5, 7, 9], max_new_tokens=4)
+    clean.run_until_drained()
+
+    fi = FaultInjector(nan_steps={2: (0,)})
+    cb = _batcher(trained, slots=1, faults=fi, retry_budget=2)
+    req = cb.submit([5, 7, 9], max_new_tokens=4)
+    done = cb.run_until_drained()
+    assert [r.rid for r in done] == [req.rid]
+    assert req.status is Status.OK
+    assert req.output == ref.output
+    assert cb.stats["retries"] == 1
+    assert cb.stats["quarantines"] == 1
+    assert fi.fired == [("nan", 2, (0,))]
+
+
+def test_nan_fault_exhausts_retry_budget(trained):
+    """Corrupting every step leaves no clean attempt: the request fails
+    with the typed reason after exactly retry_budget re-admissions."""
+    fi = FaultInjector(nan_steps={s: (0,) for s in range(50)})
+    cb = _batcher(trained, slots=1, faults=fi, retry_budget=2)
+    req = cb.submit([1, 2, 3], max_new_tokens=4)
+    done = cb.run_until_drained()
+    assert req.status is Status.FAILED
+    assert req.reason == "non_finite_logits"
+    assert cb.stats["retries"] == 2
+    assert [r.rid for r in done] == [req.rid]
+
+
+def test_transient_error_retried_within_step(trained):
+    fi = FaultInjector(error_steps={1})
+    cb = _batcher(trained, slots=1, faults=fi, transient_retries=2)
+    req = cb.submit([1, 2, 3], max_new_tokens=4)
+    done = cb.run_until_drained()
+    assert req.status is Status.OK
+    assert cb.stats["transient_decode_errors"] == 1
+    assert cb.stats.get("retries", 0) == 0    # in-step retry, no re-admit
+    assert len(done) == 1
+
+
+def test_persistent_errors_fail_typed_not_hang(trained):
+    """Every attempt at every step raises: requests burn their re-admit
+    budget and fail typed — run_until_drained terminates, nothing hangs."""
+    fi = FaultInjector(error_steps=set(range(100)), persistent_errors=True)
+    cb = _batcher(trained, slots=2, faults=fi, retry_budget=1,
+                  transient_retries=1)
+    reqs = [cb.submit([1, 2], max_new_tokens=2) for _ in range(3)]
+    done = cb.run_until_drained(max_steps=200)
+    assert {r.rid for r in done} == {r.rid for r in reqs}
+    assert all(r.status is Status.FAILED for r in done)
+
+
+def test_seeded_injector_is_deterministic():
+    a = FaultInjector.seeded(7, steps=50, slots=4, nan_rate=0.2,
+                             error_rate=0.1)
+    b = FaultInjector.seeded(7, steps=50, slots=4, nan_rate=0.2,
+                             error_rate=0.1)
+    assert a.nan_steps == b.nan_steps
+    assert a._error_steps == b._error_steps
+    assert a.nan_steps and a._error_steps    # rates actually fire
+
+
+# ---------------------------------------------------------------------------
+# AdaBits-style degradation
+
+
+def test_degradation_trace_and_zero_recompiles(trained):
+    """Under queue pressure WL must walk down the ladder one level at a
+    time, recover after the drain, reproduce exactly across runs, and
+    never recompile the jitted decode."""
+    def run():
+        pol = PrecisionPolicy(levels=(8, 6, 4), high_watermark=3,
+                              low_watermark=1, patience=2)
+        cb = _batcher(trained, slots=1, policy=pol)
+        for _ in range(6):
+            cb.submit([1, 2, 3], max_new_tokens=6)
+        done = cb.run_until_drained()
+        return cb, done
+
+    cb, done = run()
+    trace = cb.wl_trace
+    assert trace[0] == 8 and trace[-1] == 8
+    assert min(trace) == 4                     # reached the floor
+    ladder = {8: 0, 6: 1, 4: 2}
+    for prev, cur in zip(trace, trace[1:]):    # no level skipping
+        assert abs(ladder[cur] - ladder[prev]) <= 1, (prev, cur)
+    assert all(r.status is Status.OK for r in done)
+    assert cb.stats["precision_switches"] >= 2
+    # the recompile-freedom claim, asserted directly on the jit cache
+    assert cb._decode._cache_size() == 1
+    cb2, _ = run()
+    assert cb2.wl_trace == trace               # deterministic
+
+
+def test_quantize_serving_levels_structural_identity(trained):
+    cfg, state = trained
+    levels = quantize_serving_levels(state["params"], state["adapt"],
+                                     cfg.quant, (8, 6, 4))
+    assert set(levels) == {8, 6, 4}
+    ref = jax.tree_util.tree_structure(levels[8])
+    for wl in (6, 4):
+        assert jax.tree_util.tree_structure(levels[wl]) == ref
+        for a, b in zip(jax.tree_util.tree_leaves(levels[8]),
+                        jax.tree_util.tree_leaves(levels[wl])):
+            assert a.shape == b.shape and a.dtype == b.dtype
+    # degraded levels actually differ numerically from full precision
+    diff = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+        jax.tree_util.tree_leaves(levels[8]),
+        jax.tree_util.tree_leaves(levels[4]))
+        if jnp.issubdtype(a.dtype, jnp.floating))
+    assert diff > 0.0
+
+
+def test_quantize_serving_levels_empty_adapt(trained):
+    cfg, state = trained
+    out = quantize_serving_levels(state["params"], {"tensors": {}},
+                                  cfg.quant, (8, 6, 4))
+    assert list(out) == [8]    # passthrough under the top level only
+
+
+# ---------------------------------------------------------------------------
+# The whole contract at once
+
+
+def test_every_submission_reaches_exactly_one_terminal_status(trained):
+    """Flood + faults + deadlines + bounded queue, all at once: every
+    submitted rid ends in ``terminal`` with a typed status, exactly once,
+    and the per-status stats add up to the submission count."""
+    fi = FaultInjector.seeded(3, steps=400, slots=2, nan_rate=0.08,
+                              error_rate=0.05)
+    now = [0.0]
+
+    def clock():
+        now[0] += 0.01
+        return now[0]
+
+    cb = _batcher(trained, slots=2, max_queue=6, retry_budget=1,
+                  faults=fi, clock=clock)
+    reqs = []
+    for i in range(14):
+        timeout = 0.5 if i % 5 == 4 else None   # some tight deadlines
+        reqs.append(cb.submit([i + 1, i + 2], max_new_tokens=3,
+                              timeout=timeout))
+    done = cb.run_until_drained(max_steps=400)
+    assert set(cb.terminal) == {r.rid for r in reqs}
+    for r in reqs:
+        assert r.status in TERMINAL, (r.rid, r.status)
+        assert cb.terminal[r.rid] is r
+    assert sum(cb.stats[s.value] for s in TERMINAL) == len(reqs)
+    assert cb.stats["submitted"] == len(reqs)
+    # double-finish is programmatically impossible
+    ok = next((r for r in reqs if r.status is Status.OK), None)
+    if ok is not None:
+        with pytest.raises(AssertionError):
+            cb._finish(ok, Status.FAILED, "again")
